@@ -1,0 +1,45 @@
+"""Convergence-behaviour benchmark (paper Sec. 3.1 figures): residual angle
+vs iteration count for mixed-radix vs pure radix-2 schedules, and the MAE
+vs iteration-budget tradeoff — the quantitative version of the paper's
+"faster convergence without scale-factor compensation" claim.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import cordic as C
+from repro.core import sigmoid as S
+from repro.core.errors import error_stats
+
+
+def run(csv_rows: list) -> None:
+    z = jnp.linspace(-0.5, 0.5, 20001, dtype=jnp.float32)
+
+    # residual after the R2 stage and after the full MR pipeline
+    res_r2 = float(jnp.max(C.r2_residual_f(z)))
+    _, _, zr = C.mr_hrc_f(z)
+    res_mr = float(jnp.max(jnp.abs(zr)))
+    csv_rows.append(("convergence/r2_stage_max_residual", res_r2,
+                     "paper: ~0.0061"))
+    csv_rows.append(("convergence/mr_hrc_max_residual", res_mr,
+                     "after radix-4 refinement"))
+    csv_rows.append(("convergence/r4_admissible_range",
+                     C.PAPER_SCHEDULE.r4_range, "paper: 0.0104"))
+
+    # accuracy vs total iteration budget: MR vs pure R2 at equal budgets
+    for n_hrc_r2, r4 in ((8, (4, 5, 6, 7)), (8, ())):
+        for lvc_n in (9, 14):
+            sched = C.MRSchedule(r2_js=tuple(range(2, 2 + n_hrc_r2)), r4_js=r4,
+                                 lvc_js=tuple(range(1, lvc_n + 1)))
+            st = error_stats(jax.jit(lambda x, s=sched: S.sigmoid_cordic_fixed(x, s)),
+                             S.sigmoid_exact, -1, 1)
+            tag = f"r2x{n_hrc_r2}+r4x{len(r4)}+lvc{lvc_n}"
+            csv_rows.append((f"convergence/mae/{tag}", st["mae"],
+                             f"iters={n_hrc_r2 + len(r4) + lvc_n}"))
+
+    # pure radix-2 needs the textbook repeats to reach the same MAE
+    st = error_stats(jax.jit(S.sigmoid_r2_cordic_fixed), S.sigmoid_exact, -1, 1)
+    csv_rows.append(("convergence/mae/r2_baseline_with_repeats", st["mae"],
+                     f"iters={C.R2_BASELINE_SCHEDULE.num_iterations()}"))

@@ -1,0 +1,54 @@
+"""Latency/throughput microbench: CPU wall-time of each evaluator (paper's
+Fmax/pipeline-latency analog is structural; here we measure what this host
+can measure and derive the TPU-side VPU-op roofline).
+
+Reported per evaluator: us per call on a 1M-element tensor, plus derived
+elements/s. The CORDIC fixed path timing on CPU reflects the emulation (26
+unrolled integer stages), not TPU VPU throughput — the structural VPU op
+count is in resources.py; both are recorded.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sigmoid as S
+
+N = 1_000_000
+REPS = 5
+
+
+def _time(fn, x) -> float:
+    fn(x).block_until_ready()  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        fn(x).block_until_ready()
+    return (time.perf_counter() - t0) / REPS * 1e6  # us
+
+
+def run(csv_rows: list) -> None:
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, N), jnp.float32)
+    cases = {
+        "exact_jnp_sigmoid": jax.jit(S.sigmoid_exact),
+        "cordic_float": jax.jit(lambda v: S.sigmoid_cordic_float(v)),
+        "cordic_fixed_q2.14": jax.jit(lambda v: S.sigmoid_cordic_fixed(v)),
+        "r2_cordic_fixed": jax.jit(lambda v: S.sigmoid_r2_cordic_fixed(v)),
+        "pwl_16seg": jax.jit(lambda v: S.sigmoid_pwl_fixed(v, 16)),
+        "lut_256": jax.jit(lambda v: S.sigmoid_lut_fixed(v, 256)),
+    }
+    for name, fn in cases.items():
+        us = _time(fn, x)
+        csv_rows.append((f"latency/{name}", round(us, 1),
+                         f"{N / us:.0f} elem/us-e6; host-CPU measurement"))
+
+    # integer end-to-end path (no float boundary) — the quantized-serving mode
+    xq = jnp.asarray(np.random.default_rng(1).integers(-(1 << 14), 1 << 14, N),
+                     jnp.int32)
+    from repro.core.cordic import sigmoid_mr_q
+
+    us = _time(jax.jit(sigmoid_mr_q), xq)
+    csv_rows.append(("latency/cordic_fixed_int_io", round(us, 1),
+                     "integer in/out (quantized pipeline)"))

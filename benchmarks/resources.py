@@ -1,0 +1,53 @@
+"""Paper Table 1 analog: hardware-resource model of each evaluator.
+
+FPGA slices/DSPs do not exist on TPU; the transferable quantities are
+(DESIGN.md section 2): per-evaluation op counts (adds/shifts/compares —
+the paper's own currency, since its datapath is adder-dominated), ROM bits,
+iteration/pipeline depth, and — for the Pallas kernel — HLO op statistics
+and VMEM tile footprint from the compiled kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cordic as C
+
+
+def _counts(sched):
+    return C.shift_add_op_count(sched)
+
+
+def run(csv_rows: list) -> None:
+    mr = _counts(C.PAPER_SCHEDULE)
+    r2 = _counts(C.R2_BASELINE_SCHEDULE)
+
+    for name, r in (("proposed_mr_hrc", mr), ("r2_cordic [9]", r2)):
+        csv_rows.append((f"table1/{name}/iterations", r["iterations"], ""))
+        csv_rows.append((f"table1/{name}/adders", r["adds"], ""))
+        csv_rows.append((f"table1/{name}/shifts", r["shifts"], ""))
+        csv_rows.append((f"table1/{name}/compares", r["compares"], ""))
+        csv_rows.append((f"table1/{name}/rom_bits", r["rom_bits"], ""))
+        csv_rows.append((f"table1/{name}/multipliers", r["multipliers"],
+                         "DSP-free datapath"))
+
+    # mixed-radix saving — the paper's Table 1 headline, in iteration terms
+    save = 1.0 - mr["iterations"] / r2["iterations"]
+    csv_rows.append(("table1/mixed_radix_iteration_saving", round(save, 4),
+                     f"{mr['iterations']} vs {r2['iterations']} stages"))
+    add_save = 1.0 - mr["adds"] / r2["adds"]
+    csv_rows.append(("table1/mixed_radix_adder_saving", round(add_save, 4), ""))
+
+    # Pallas kernel: HLO ops + VMEM footprint of the compiled (interpret) call
+    from repro.kernels import cordic_act as K
+
+    x = jnp.zeros((256, 1024), jnp.float32)
+    lowered = jax.jit(lambda v: K.act_2d(v, "sigmoid", interpret=True)).lower(x)
+    txt = lowered.as_text()
+    n_ops = sum(1 for ln in txt.splitlines() if "= " in ln)
+    csv_rows.append(("table1/pallas_kernel/stablehlo_lines", n_ops, "256x1024 tile"))
+    blk = K.DEFAULT_BLOCK
+    vmem = blk[0] * blk[1] * 4
+    csv_rows.append(("table1/pallas_kernel/vmem_tile_bytes", vmem,
+                     f"block={blk}, ~6 live tiles ~= {6 * vmem / 2**20:.0f} MiB"))

@@ -1,0 +1,37 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+    accuracy.py     — Table 2 (MAE comparison, unit + wide domains)
+    resources.py    — Table 1 (resource model: op counts, ROM, VMEM)
+    latency.py      — throughput microbench (host CPU) + integer path
+    convergence.py  — Sec. 3.1 convergence behaviour & iteration tradeoff
+
+Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` /
+``repro.launch.roofline`` (they need the 512-device env) — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import accuracy, convergence, latency, resources
+
+    rows: list = []
+    for mod in (accuracy, resources, convergence, latency):
+        t0 = time.time()
+        mod.run(rows)
+        print(f"# {mod.__name__} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+    print("name,value,derived")
+    for name, value, derived in rows:
+        if isinstance(value, float):
+            print(f"{name},{value:.6g},{derived}")
+        else:
+            print(f"{name},{value},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Quickstart: the paper's MR-HRC CORDIC sigmoid in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Evaluates sigmoid with the bit-accurate 16-bit Q2.14 pipeline and prints
+   the paper-comparison accuracy table (Table 2 reproduction).
+2. Shows the convergence arithmetic of Sec. 3.1 (ranges / residuals).
+3. Runs the Pallas TPU kernel (interpret mode on CPU) and verifies it is
+   bit-identical to the oracle.
+4. Uses the activation through the registry inside a tiny SwiGLU MLP with
+   gradients flowing through the quantized forward.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cordic as C
+from repro.core import sigmoid as S
+from repro.core.activations import get_activation
+from repro.core.errors import error_stats
+
+print("=" * 72)
+print("1) 16-bit Q2.14 MR-HRC sigmoid vs exact, x in [-1, 1]")
+print("=" * 72)
+for name in ("proposed_mr_hrc_q2.14", "r2_cordic_q2.14 [9]", "pwl_8seg [11]",
+             "lut_256 [10]", "mr_hrc_float (algorithmic)"):
+    st = error_stats(jax.jit(S.TABLE2_METHODS[name]), S.sigmoid_exact, -1, 1)
+    print(f"  {name:32s} MAE={st['mae']:.3e}  max={st['max']:.3e}")
+print(f"  paper reports MAE 4.23e-4 for the proposed design; ours is better "
+      f"(full 14-iter LVC) and matches the paper at LVC j<=9.")
+
+print()
+print("=" * 72)
+print("2) Convergence arithmetic (paper Sec. 3.1)")
+print("=" * 72)
+s = C.PAPER_SCHEDULE
+print(f"  radix-2 range  sum atanh(2^-j), j=2..9  = {s.r2_range:.6f} (>= 0.5)")
+z = jnp.linspace(-0.5, 0.5, 50001, dtype=jnp.float32)
+print(f"  radix-2 stage worst residual            = "
+      f"{float(jnp.max(C.r2_residual_f(z))):.6f} (paper: 0.0061)")
+print(f"  radix-4 admissible start range (j=4..7) = {s.r4_range:.6f} "
+      f"(paper: 0.0104)")
+lo, hi = s.r4_gain_bounds
+print(f"  radix-4 cumulative gain in [{lo:.8f}, {hi:.1f}]  -> scale-free at "
+      f"16 bits (1-gain < 2^-14)")
+print(f"  K_h = {s.r2_gain:.6f}; x0 = 1/K_h = {s.x0:.6f} (absorbed, free)")
+
+print()
+print("=" * 72)
+print("3) Pallas TPU kernel (interpret on CPU) — bit-exact vs oracle")
+print("=" * 72)
+from repro.kernels import ops, ref
+
+x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, (8, 512)), jnp.float32)
+got = ops.sigmoid(x)
+want = ref.sigmoid_ref(x)
+same = np.array_equal(np.round(np.asarray(got) * 2 ** 14),
+                      np.round(np.asarray(want) * 2 ** 14))
+print(f"  kernel vs pure-jnp Q2.14 oracle on (8,512): bit-identical = {same}")
+
+print()
+print("=" * 72)
+print("4) Training through the quantized activation (custom_jvp)")
+print("=" * 72)
+silu = get_activation("silu", "cordic_fixed", range_mode="reduce")
+w = jnp.asarray(np.random.default_rng(1).normal(0, 0.5, (16, 16)), jnp.float32)
+
+
+def loss(w):
+    h = silu(x[:, :16] @ w)
+    return jnp.mean(jnp.square(h - 0.25))
+
+
+g = jax.grad(loss)(w)
+print(f"  loss={float(loss(w)):.5f}  |grad|={float(jnp.abs(g).mean()):.5f} "
+      f"(finite: {bool(np.isfinite(np.asarray(g)).all())})")
+print("\nDone. See examples/train_lm.py for the end-to-end LM training driver.")

@@ -1,0 +1,68 @@
+"""Batched serving demo: continuous batching with CORDIC activations.
+
+    PYTHONPATH=src python examples/serve_lm.py [--requests 8] [--slots 4]
+
+Loads a small GQA LM (optionally from a train_lm.py checkpoint), submits a
+queue of prompt requests, and serves them through the slot-based engine:
+prefill + per-step batched decode, slots refilled as requests finish.
+All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--act", default="cordic_fixed")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="serve-demo", family="dense",
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+        d_ff=768, vocab_size=4096, act_impl=args.act,
+        rope_theta=1e4, dtype="float32",
+    )
+    print(f"[serve_lm] model {cfg.param_counts()['total'] / 1e6:.1f}M params, "
+          f"act_impl={cfg.act_impl}, slots={args.slots}")
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 12))
+        r = Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+                    max_new_tokens=args.max_new)
+        reqs.append(r)
+        eng.submit(r)
+
+    t0 = time.time()
+    steps = 0
+    while eng.step():
+        steps += 1
+    wall = time.time() - t0
+    total_new = sum(len(r.out) for r in reqs)
+    print(f"[serve_lm] served {len(reqs)} requests / {total_new} tokens in "
+          f"{steps} engine steps, {wall:.1f}s "
+          f"({total_new / wall:.1f} tok/s on host CPU)")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> out={r.out}")
+    assert all(r.done for r in reqs)
+    print("[serve_lm] OK — all requests completed.")
+
+
+if __name__ == "__main__":
+    main()

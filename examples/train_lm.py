@@ -1,0 +1,101 @@
+"""End-to-end training driver: a ~100M-param LM with CORDIC activations.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--act cordic_fixed]
+
+Builds a 12-layer/512-wide llama-style model (~100M params with the 32k
+vocab), trains it on the deterministic synthetic corpus for a few hundred
+steps with the full production stack — AdamW + cosine schedule, microbatch
+accumulation, async checkpointing, straggler detection — and prints the
+loss curve. The SwiGLU gates run through the paper's Q2.14 MR-HRC pipeline
+(act_impl=cordic_fixed) by default; pass --act exact to compare curves.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DataIterator, SyntheticLMDataset
+from repro.checkpoint import manager as ckpt
+from repro.distributed.fault_tolerance import StragglerDetector
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+def build_cfg(act_impl: str) -> ModelConfig:
+    return ModelConfig(
+        name="train-demo-100m", family="dense",
+        num_layers=16, d_model=512, num_heads=8, num_kv_heads=4,
+        d_ff=2048, vocab_size=32768, act_impl=act_impl,
+        rope_theta=1e4, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--data-vocab", type=int, default=2048,
+                    help="synthetic stream uses a subset of the model vocab "
+                         "so structure is learnable within a CPU-budget run")
+    ap.add_argument("--act", default="cordic_fixed",
+                    choices=["exact", "cordic_float", "cordic_fixed", "cordic_pallas"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.act)
+    n_params = cfg.param_counts()["total"]
+    print(f"[train_lm] model {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"act_impl={cfg.act_impl}")
+
+    data_cfg = DataConfig(vocab_size=args.data_vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=42)
+    it = DataIterator(SyntheticLMDataset(data_cfg))
+
+    opt_cfg = adamw.AdamWConfig(lr=3e-4, weight_decay=0.01)
+    state = step_lib.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    train_step = jax.jit(step_lib.make_train_step(
+        cfg, opt_cfg, accum=args.accum, warmup_steps=args.steps // 10,
+        total_steps=args.steps), donate_argnums=(0,))
+
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+    det = StragglerDetector()
+    losses = []
+    t_start = time.time()
+    for step in range(args.steps):
+        batch_np = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        det.observe(step, dt)
+        losses.append(loss)
+        if step % 20 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq / dt
+            print(f"  step {step:4d}  loss {loss:7.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):6.3f}  "
+                  f"{dt * 1e3:6.0f} ms  {tok_s / 1e3:5.1f}k tok/s")
+        if (step + 1) % 100 == 0:
+            saver.save(step + 1, state, extra={"data_step": it.state()["step"]})
+    saver.wait()
+
+    first = float(np.mean(losses[:10]))
+    last = float(np.mean(losses[-10:]))
+    uniform = float(np.log(args.data_vocab))
+    print(f"[train_lm] loss: first10={first:.3f} last10={last:.3f} "
+          f"(uniform={uniform:.2f}); wall={time.time() - t_start:.0f}s; "
+          f"stragglers={len(det.events)}")
+    assert last < first, "training did not reduce loss"
+    print("[train_lm] OK — loss decreased through the CORDIC activation path.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSONs.
+
+    PYTHONPATH=src python results/make_experiments_tables.py
+"""
+import glob
+import json
+import sys
+
+GB = 1024 ** 3
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load():
+    recs = []
+    for p in sorted(glob.glob("results/dryrun_*.json")):
+        recs.extend(json.load(open(p)))
+    return recs
+
+
+def dryrun_table(recs):
+    print("### Dry-run matrix (status / compile time / per-device arg bytes / "
+          "collective mix)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | args GiB/dev (1-pod) | "
+          "collectives per step (1-pod, corrected) |")
+    print("|---|---|---|---|---|---|")
+    by = {}
+    for r in recs:
+        by.setdefault((r["arch"], r["shape"]), {})[bool(r.get("multi_pod"))] = r
+    for (arch, shape), d in sorted(by.items(), key=lambda kv: (kv[0][0], ORDER[kv[0][1]])):
+        sp = d.get(False, {})
+        mp = d.get(True, {})
+
+        def cell(r):
+            if not r:
+                return "—"
+            if r["status"] == "ok":
+                return f"OK ({r['compile_s']:.0f}s)"
+            if r["status"] == "skipped":
+                return "skip"
+            return "ERROR"
+
+        args = "—"
+        colls = "—"
+        if sp.get("status") == "ok":
+            ma = sp.get("memory_analysis", {})
+            if "argument_size_in_bytes" in ma:
+                # memory_analysis on the CPU backend reports whole-module
+                # argument bytes; per-device = /devices
+                args = f"{ma['argument_size_in_bytes'] / sp['devices'] / GB:.2f}"
+            cc = sp["collective"]["op_counts"]
+            colls = ", ".join(f"{k}x{int(v)}" for k, v in sorted(cc.items())) or "none"
+        print(f"| {arch} | {shape} | {cell(sp)} | {cell(mp)} | {args} | {colls} |")
+    print()
+    skips = [r for r in recs if r["status"] == "skipped" and not r.get("multi_pod")]
+    for r in sorted(skips, key=lambda r: r["arch"]):
+        print(f"* skip: **{r['arch']} × {r['shape']}** — {r['reason']}")
+
+
+if __name__ == "__main__":
+    recs = load()
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    print(f"<!-- {n_ok} ok / {n_skip} skipped / {n_err} errors -->\n")
+    dryrun_table(recs)

@@ -1,0 +1,57 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+All 10 assigned architectures plus the paper's own activation config.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs import (
+    command_r_plus_104b,
+    deepseek_coder_33b,
+    deepseek_v2_lite_16b,
+    internvl2_1b,
+    musicgen_large,
+    phi3_5_moe_42b,
+    qwen2_5_32b,
+    xlstm_1_3b,
+    yi_9b,
+    zamba2_1_2b,
+)
+from repro.configs.base import (  # noqa: F401
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    XLSTMConfig,
+    shape_applicable,
+)
+
+_MODULES = {
+    "qwen2.5-32b": qwen2_5_32b,
+    "command-r-plus-104b": command_r_plus_104b,
+    "deepseek-coder-33b": deepseek_coder_33b,
+    "yi-9b": yi_9b,
+    "xlstm-1.3b": xlstm_1_3b,
+    "musicgen-large": musicgen_large,
+    "zamba2-1.2b": zamba2_1_2b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe_42b,
+    "internvl2-1b": internvl2_1b,
+}
+
+ARCH_IDS = tuple(_MODULES.keys())
+
+
+def get_config(arch_id: str, **kw) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _MODULES[arch_id].full(**kw)
+
+
+def get_smoke(arch_id: str, **kw) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return _MODULES[arch_id].smoke(**kw)

@@ -1,0 +1,13 @@
+"""Core: the paper's MR-HRC + R2-LVC CORDIC sigmoid and the activation registry."""
+from repro.core.cordic import (  # noqa: F401
+    FixedConfig,
+    MRSchedule,
+    PAPER_FIXED,
+    PAPER_SCHEDULE,
+    R2_BASELINE_SCHEDULE,
+    sigmoid_fixed,
+    sigmoid_mr_f,
+    tanh_fixed,
+    tanh_mr_f,
+)
+from repro.core.activations import get_activation  # noqa: F401

@@ -1,0 +1,140 @@
+"""Pluggable activation registry — the bridge between the paper's CORDIC
+evaluator and the LM substrate.
+
+Every model in this framework obtains its nonlinearities from
+``get_activation(kind, impl)`` so the MR-HRC pipeline is a first-class,
+config-selectable feature:
+
+    impl = "exact"         : jnp/XLA transcendental lowering (float reference)
+    impl = "cordic_float"  : MR-HRC algorithm in f32 (no quantization)
+    impl = "cordic_fixed"  : bit-accurate Q2.14 (paper-faithful), pure jnp int32
+    impl = "cordic_pallas" : Pallas TPU kernel of the Q2.14 pipeline
+
+Quantized/iterative forwards are wrapped in ``jax.custom_jvp`` computing the
+analytic derivative from the primal *output* (sigma' = s(1-s),
+tanh' = 1 - t^2), so training through the hardware activation is exact to
+first order and needs no extra evaluation.
+
+Range handling: the paper's contract is |x| <= 1 (sigmoid) / |z| <= 0.5
+(tanh). In-network pre-activations exceed that, so network-facing wrappers
+use ``range_mode``:
+    "clamp"  — saturate into the paper domain (paper-faithful),
+    "reduce" — dyadic argument reduction to |x| <= 8 (beyond-paper, default
+               for model configs; see core/sigmoid.sigmoid_cordic_wide).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sigmoid as S
+from repro.core.cordic import FixedConfig, MRSchedule, PAPER_FIXED, PAPER_SCHEDULE
+
+ACT_IMPLS = ("exact", "cordic_float", "cordic_fixed", "cordic_pallas")
+RANGE_MODES = ("clamp", "reduce")
+
+
+def _with_sigmoid_jvp(fwd: Callable) -> Callable:
+    @jax.custom_jvp
+    def f(x):
+        return fwd(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        s = f(x)
+        return s, (s * (1.0 - s)) * dx
+
+    return f
+
+
+def _with_tanh_jvp(fwd: Callable) -> Callable:
+    @jax.custom_jvp
+    def f(x):
+        return fwd(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        t = f(x)
+        return t, (1.0 - t * t) * dx
+
+    return f
+
+
+def _sigmoid_fwd(impl: str, range_mode: str, sched: MRSchedule, cfg: FixedConfig):
+    if impl == "exact":
+        return jax.nn.sigmoid
+    if impl == "cordic_float":
+        if range_mode == "clamp":
+            return lambda x: S.sigmoid_cordic_float(x, sched)
+        # float algorithm with dyadic reduction: reuse wide path but float core
+        return lambda x: S.sigmoid_cordic_wide(x, sched, cfg)
+    if impl == "cordic_fixed":
+        if range_mode == "clamp":
+            return lambda x: S.sigmoid_cordic_fixed(x, sched, cfg)
+        return lambda x: S.sigmoid_cordic_wide(x, sched, cfg)
+    if impl == "cordic_pallas":
+        from repro.kernels import ops as kops  # lazy: kernels optional at import
+
+        if range_mode == "clamp":
+            return lambda x: kops.sigmoid(x)
+        return lambda x: kops.sigmoid_wide(x)
+    raise ValueError(f"unknown activation impl {impl!r}")
+
+
+def _tanh_fwd(impl: str, range_mode: str, sched: MRSchedule, cfg: FixedConfig):
+    if impl == "exact":
+        return jnp.tanh
+    # tanh(z) = 2*sigmoid(2z) - 1 handles range via the sigmoid path.
+    sig = _sigmoid_fwd(impl, range_mode, sched, cfg)
+    if impl in ("cordic_float", "cordic_fixed", "cordic_pallas") and range_mode == "clamp":
+        if impl == "cordic_float":
+            return lambda z: S.tanh_cordic_float(z, sched)
+        if impl == "cordic_fixed":
+            return lambda z: S.tanh_cordic_fixed(z, sched, cfg)
+        from repro.kernels import ops as kops
+
+        return lambda z: kops.tanh(z)
+    return lambda z: 2.0 * sig(2.0 * z) - 1.0
+
+
+def get_activation(kind: str, impl: str = "exact", range_mode: str = "reduce",
+                   sched: MRSchedule = PAPER_SCHEDULE,
+                   cfg: FixedConfig = PAPER_FIXED) -> Callable:
+    """Return a differentiable activation fn of the requested kind/impl.
+
+    kind in {"sigmoid", "tanh", "silu", "gelu_tanh", "relu", "gelu"}.
+    """
+    if impl not in ACT_IMPLS:
+        raise ValueError(f"impl {impl!r} not in {ACT_IMPLS}")
+    if range_mode not in RANGE_MODES:
+        raise ValueError(f"range_mode {range_mode!r} not in {RANGE_MODES}")
+
+    if kind == "relu":
+        return jax.nn.relu
+    if kind == "gelu":
+        return jax.nn.gelu
+
+    if kind == "sigmoid":
+        fwd = _sigmoid_fwd(impl, range_mode, sched, cfg)
+        return fwd if impl == "exact" else _with_sigmoid_jvp(fwd)
+    if kind == "tanh":
+        fwd = _tanh_fwd(impl, range_mode, sched, cfg)
+        return fwd if impl == "exact" else _with_tanh_jvp(fwd)
+    if kind == "silu":
+        if impl == "exact":
+            return jax.nn.silu
+        sig = _with_sigmoid_jvp(_sigmoid_fwd(impl, range_mode, sched, cfg))
+        return lambda x: x * sig(x)
+    if kind == "gelu_tanh":
+        # GELU(x) ~= 0.5 x (1 + tanh(sqrt(2/pi)(x + 0.044715 x^3)))
+        if impl == "exact":
+            return partial(jax.nn.gelu, approximate=True)
+        th = _with_tanh_jvp(_tanh_fwd(impl, range_mode, sched, cfg))
+        c = 0.7978845608028654
+        return lambda x: 0.5 * x * (1.0 + th(c * (x + 0.044715 * x * x * x)))
+    raise ValueError(f"unknown activation kind {kind!r}")

@@ -1,0 +1,20 @@
+"""Error-analysis utilities used by tests and the accuracy benchmark."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def error_stats(fn, ref_fn, lo: float, hi: float, n: int = 20001) -> dict:
+    """MAE / max-abs / RMS error of `fn` vs `ref_fn` on a uniform grid."""
+    x = jnp.linspace(lo, hi, n, dtype=jnp.float32)
+    y = np.asarray(fn(x), dtype=np.float64)
+    r = np.asarray(ref_fn(x), dtype=np.float64)
+    e = np.abs(y - r)
+    return dict(mae=float(e.mean()), max=float(e.max()),
+                rms=float(np.sqrt((e * e).mean())), n=n, lo=lo, hi=hi)
+
+
+def ulp(err: float, frac_bits: int = 14) -> float:
+    """Express an absolute error in output ULPs of a Qx.frac format."""
+    return err * (1 << frac_bits)

@@ -1,0 +1,138 @@
+"""Bit-accurate fixed-point (Q-format) arithmetic emulated in int32 JAX lanes.
+
+The paper's datapath is a 16-bit two's-complement fixed-point pipeline. All
+datapath values lie in (-2, 2) (max magnitude is cosh(0.5)/K_h < 1.2), so we
+use Q2.14: 1 sign bit, 1 integer bit, 14 fraction bits; resolution 2^-14.
+
+We carry values in int32 lanes (TPU VPU native width) and mask back to 16-bit
+two's complement after every arithmetic op, which makes the emulation
+*bit-exact* with respect to a 16-bit hardware register file, including
+wraparound semantics. Within the paper's input domain wraparound never
+triggers (asserted by property tests), but the masking keeps us honest.
+
+Shifts use arithmetic right shift with truncation (what `>>>` does on a
+two's-complement register) by default; round-to-nearest is available for the
+output stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """A signed two's-complement fixed-point format with `total_bits` storage
+    and `frac_bits` fractional bits."""
+
+    total_bits: int = 16
+    frac_bits: int = 14
+
+    @property
+    def int_bits(self) -> int:  # excluding sign
+        return self.total_bits - self.frac_bits - 1
+
+    @property
+    def scale(self) -> int:
+        return 1 << self.frac_bits
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+    @property
+    def resolution(self) -> float:
+        return 1.0 / self.scale
+
+    def __str__(self) -> str:  # e.g. Q2.14
+        return f"Q{self.int_bits + 1}.{self.frac_bits}"
+
+
+#: The paper's 16-bit format.
+Q2_14 = QFormat(total_bits=16, frac_bits=14)
+#: Wider internal formats used for sensitivity studies.
+Q2_20 = QFormat(total_bits=22, frac_bits=20)
+Q2_29 = QFormat(total_bits=31, frac_bits=29)
+
+
+def wrap(v: jax.Array, fmt: QFormat) -> jax.Array:
+    """Mask an int32 lane back to `fmt.total_bits` two's complement."""
+    n = fmt.total_bits
+    mask = (1 << n) - 1
+    half = 1 << (n - 1)
+    return ((v + half) & mask) - half
+
+
+def sat(v: jax.Array, fmt: QFormat) -> jax.Array:
+    """Saturate instead of wrapping (used at quantization boundaries)."""
+    return jnp.clip(v, fmt.min_int, fmt.max_int)
+
+
+def quantize(x: jax.Array, fmt: QFormat = Q2_14, rounding: str = "nearest") -> jax.Array:
+    """float -> fixed-point integer code (int32 lane), saturating."""
+    scaled = x * float(fmt.scale)
+    if rounding == "nearest":
+        q = jnp.round(scaled)
+    elif rounding == "floor":
+        q = jnp.floor(scaled)
+    else:
+        raise ValueError(f"unknown rounding {rounding!r}")
+    return sat(q.astype(jnp.int32), fmt)
+
+
+def dequantize(v: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """fixed-point integer code -> float32."""
+    return v.astype(jnp.float32) * np.float32(fmt.resolution)
+
+
+def const(x: float, fmt: QFormat = Q2_14) -> np.int32:
+    """Quantize a python scalar to an int32 constant (round-to-nearest)."""
+    q = int(np.round(x * fmt.scale))
+    q = max(fmt.min_int, min(fmt.max_int, q))
+    return np.int32(q)
+
+
+def add(a: jax.Array, b: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    return wrap(a + b, fmt)
+
+
+def sub(a: jax.Array, b: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    return wrap(a - b, fmt)
+
+
+def shr(v: jax.Array, s: int, fmt: QFormat = Q2_14, rounding: str = "trunc") -> jax.Array:
+    """Arithmetic right shift by a *static* amount.
+
+    "trunc" matches a plain two's-complement `>> s` (floor); "nearest" adds
+    the half-ULP bias first (one extra adder in hardware).
+    """
+    if s == 0:
+        return v
+    if rounding == "nearest":
+        v = v + (1 << (s - 1))
+    return wrap(v >> s, fmt)
+
+
+def shl(v: jax.Array, s: int, fmt: QFormat = Q2_14) -> jax.Array:
+    """Left shift (wrapping, as hardware would)."""
+    if s == 0:
+        return v
+    return wrap(v << s, fmt)
+
+
+def requantize(v: jax.Array, src: QFormat, dst: QFormat, rounding: str = "trunc") -> jax.Array:
+    """Convert between Q formats (shift of the binary point)."""
+    ds = src.frac_bits - dst.frac_bits
+    if ds >= 0:
+        out = shr(v, ds, dst, rounding=rounding) if ds else v
+    else:
+        out = v << (-ds)
+    return wrap(out, dst)

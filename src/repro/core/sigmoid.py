@@ -1,0 +1,188 @@
+"""Sigmoid/tanh evaluators: the paper's MR-HRC pipeline plus the baseline
+families it compares against in Table 2 (piecewise-linear, piecewise-poly2,
+LUT, Taylor, conventional radix-2 CORDIC).
+
+All baselines are implemented at the same 16-bit fixed-point budget so the
+accuracy comparison (benchmarks/accuracy.py) is apples-to-apples, mirroring
+the paper's methodology.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fp
+from repro.core.cordic import (
+    FixedConfig,
+    MRSchedule,
+    PAPER_FIXED,
+    PAPER_SCHEDULE,
+    R2_BASELINE_SCHEDULE,
+    sigmoid_fixed,
+    sigmoid_mr_f,
+    tanh_fixed,
+    tanh_mr_f,
+)
+
+# --------------------------------------------------------------------------
+# Reference + paper implementations
+# --------------------------------------------------------------------------
+
+def sigmoid_exact(x):
+    return jax.nn.sigmoid(x)
+
+
+def tanh_exact(x):
+    return jnp.tanh(x)
+
+
+def sigmoid_cordic_float(x, sched: MRSchedule = PAPER_SCHEDULE, clamp: bool = True):
+    """MR-HRC sigmoid in float arithmetic (algorithmic error only)."""
+    if clamp:
+        x = jnp.clip(x, -1.0, 1.0)
+    return sigmoid_mr_f(x, sched)
+
+
+def sigmoid_cordic_fixed(x, sched: MRSchedule = PAPER_SCHEDULE,
+                         cfg: FixedConfig = PAPER_FIXED, clamp: bool = True):
+    """The paper's implementation: 16-bit Q2.14 MR-HRC + R2-LVC."""
+    return sigmoid_fixed(x, sched, cfg, clamp=clamp)
+
+
+def tanh_cordic_float(z, sched: MRSchedule = PAPER_SCHEDULE, clamp: bool = True):
+    if clamp:
+        z = jnp.clip(z, -0.5, 0.5)
+    return tanh_mr_f(z, sched)
+
+
+def tanh_cordic_fixed(z, sched: MRSchedule = PAPER_SCHEDULE,
+                      cfg: FixedConfig = PAPER_FIXED, clamp: bool = True):
+    return tanh_fixed(z, sched, cfg, clamp=clamp)
+
+
+def sigmoid_r2_cordic_fixed(x, cfg: FixedConfig = PAPER_FIXED, clamp: bool = True):
+    """Conventional pure radix-2 hyperbolic CORDIC baseline ([9]-family):
+    j=2..14 with the textbook repeated iterations, same 16-bit datapath."""
+    return sigmoid_fixed(x, R2_BASELINE_SCHEDULE, cfg, clamp=clamp)
+
+
+# --------------------------------------------------------------------------
+# Range extension beyond the paper's |x| <= 1 contract
+# --------------------------------------------------------------------------
+def sigmoid_cordic_wide(x, sched: MRSchedule = PAPER_SCHEDULE,
+                        cfg: FixedConfig = PAPER_FIXED, max_doublings: int = 3):
+    """Beyond-paper range extension to |x| <= 2^max_doublings.
+
+    Uses the dyadic identity  sigma(2a) = s^2 / (s^2 + (1-s)^2)  with
+    s = sigma(a) — evaluated here in float on top of the fixed-point core —
+    applied k times where k = ceil(log2(|x|)). For |x| <= 1 this is exactly
+    the paper pipeline (k = 0). Keeps worst-case error bounded while covering
+    the pre-activation ranges seen inside LM blocks.
+    """
+    ax = jnp.abs(x)
+    k = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(ax, 1e-30))), 0, max_doublings)
+    scale = jnp.exp2(-k)
+    s = sigmoid_cordic_fixed(x * scale, sched, cfg, clamp=True)
+    for i in range(max_doublings):
+        apply = k > i
+        s2 = jnp.square(s)
+        doubled = s2 / jnp.maximum(s2 + jnp.square(1.0 - s), 1e-12)
+        s = jnp.where(apply, doubled, s)
+    return s
+
+
+# --------------------------------------------------------------------------
+# Baseline families (paper Table 1/2 comparison points)
+# --------------------------------------------------------------------------
+def _quant_out(y, fmt=fp.Q2_14):
+    """Quantize a baseline's output to the same 16-bit output format."""
+    return fp.dequantize(fp.quantize(y, fmt), fmt)
+
+
+def _np_quant(a: np.ndarray, fmt=fp.Q2_14) -> np.ndarray:
+    """Pure-numpy table quantization (trace-safe constant prep)."""
+    q = np.clip(np.round(a * fmt.scale), fmt.min_int, fmt.max_int)
+    return (q / fmt.scale).astype(np.float32)
+
+
+def sigmoid_pwl_fixed(x, segments: int = 16, lo: float = -1.0, hi: float = 1.0):
+    """Piecewise-linear approximation ([7]/[11]-family): uniform segments,
+    16-bit quantized slope/intercept tables and output."""
+    fmt = fp.Q2_14
+    edges = np.linspace(lo, hi, segments + 1)
+    xs = (edges[:-1] + edges[1:]) / 2.0
+    x0, x1 = edges[:-1], edges[1:]
+    y0 = 1.0 / (1.0 + np.exp(-x0))
+    y1 = 1.0 / (1.0 + np.exp(-x1))
+    slope = (y1 - y0) / (x1 - x0)
+    icept = y0 - slope * x0
+    slope_q = _np_quant(slope, fmt)
+    icept_q = _np_quant(icept, fmt)
+    xc = jnp.clip(x, lo, hi)
+    idx = jnp.clip(((xc - lo) / (hi - lo) * segments).astype(jnp.int32), 0, segments - 1)
+    y = jnp.take(jnp.asarray(slope_q), idx) * xc + jnp.take(jnp.asarray(icept_q), idx)
+    return _quant_out(y)
+
+
+def sigmoid_poly2_fixed(x, segments: int = 8, lo: float = -1.0, hi: float = 1.0):
+    """Piecewise 2nd-degree polynomial ([2]/[8]-family), least-squares fit
+    per segment, 16-bit coefficient/output quantization."""
+    fmt = fp.Q2_14
+    edges = np.linspace(lo, hi, segments + 1)
+    coefs = []
+    for a, b in zip(edges[:-1], edges[1:]):
+        xs = np.linspace(a, b, 64)
+        ys = 1.0 / (1.0 + np.exp(-xs))
+        c = np.polyfit(xs, ys, 2)
+        coefs.append(c)
+    coefs = np.asarray(coefs)  # (segments, 3) highest-first
+    coefs_q = _np_quant(coefs, fmt)
+    xc = jnp.clip(x, lo, hi)
+    idx = jnp.clip(((xc - lo) / (hi - lo) * segments).astype(jnp.int32), 0, segments - 1)
+    c2 = jnp.take(jnp.asarray(coefs_q[:, 0]), idx)
+    c1 = jnp.take(jnp.asarray(coefs_q[:, 1]), idx)
+    c0 = jnp.take(jnp.asarray(coefs_q[:, 2]), idx)
+    y = (c2 * xc + c1) * xc + c0
+    return _quant_out(y)
+
+
+def sigmoid_lut_fixed(x, entries: int = 256, lo: float = -1.0, hi: float = 1.0):
+    """Direct lookup table ([10]-family): nearest-entry LUT, 16-bit outputs."""
+    fmt = fp.Q2_14
+    grid = np.linspace(lo, hi, entries)
+    tab = 1.0 / (1.0 + np.exp(-grid))
+    tab_q = _np_quant(tab, fmt)
+    xc = jnp.clip(x, lo, hi)
+    idx = jnp.clip(jnp.round((xc - lo) / (hi - lo) * (entries - 1)).astype(jnp.int32),
+                   0, entries - 1)
+    return jnp.take(jnp.asarray(tab_q), idx)
+
+
+def sigmoid_taylor_fixed(x, order: int = 5):
+    """Maclaurin expansion of sigmoid ([2]-family Taylor variant):
+    sigma(x) ~= 1/2 + x/4 - x^3/48 + x^5/480, 16-bit quantized."""
+    c = {1: 0.25, 3: -1.0 / 48.0, 5: 1.0 / 480.0, 7: -17.0 / 80640.0}
+    xc = jnp.clip(x, -1.0, 1.0)
+    y = jnp.full_like(xc, 0.5)
+    p = xc
+    for k in (1, 3, 5, 7):
+        if k > order:
+            break
+        y = y + c[k] * p
+        p = p * xc * xc
+    return _quant_out(y)
+
+
+#: Registry used by the accuracy benchmark (paper Table 2 reproduction).
+TABLE2_METHODS = {
+    "proposed_mr_hrc_q2.14": lambda x: sigmoid_cordic_fixed(x),
+    "r2_cordic_q2.14 [9]": lambda x: sigmoid_r2_cordic_fixed(x),
+    "pwl_16seg [7]/[11]": lambda x: sigmoid_pwl_fixed(x, 16),
+    "pwl_8seg [11]": lambda x: sigmoid_pwl_fixed(x, 8),
+    "poly2_8seg [2]/[8]": lambda x: sigmoid_poly2_fixed(x, 8),
+    "lut_256 [10]": lambda x: sigmoid_lut_fixed(x, 256),
+    "lut_64 [10]": lambda x: sigmoid_lut_fixed(x, 64),
+    "taylor_o5 [2]": lambda x: sigmoid_taylor_fixed(x, 5),
+    "mr_hrc_float (algorithmic)": lambda x: sigmoid_cordic_float(x),
+}

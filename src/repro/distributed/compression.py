@@ -1,0 +1,66 @@
+"""Int8 error-feedback gradient compression.
+
+Distributed-optimization trick for bandwidth-bound data-parallel training:
+gradients are quantized to int8 with a per-tensor scale before the
+data-parallel reduction; the quantization residual is carried in an error-
+feedback buffer and added back the next step (EF-SGD / 1-bit-Adam lineage),
+which keeps convergence unbiased to first order.
+
+Under pjit the DP all-reduce is implicit in the backward pass, so the
+compression is exposed two ways:
+
+* `compress_grads` — quantize->dequantize with error feedback applied to the
+  gradient pytree right before the optimizer (models the end-to-end numerics
+  of a compressed reduction; what the trainer flag uses);
+* `psum_compressed` — an explicit shard_map collective (int8 payload, int32
+  accumulation) for runtimes that own their reductions; validated in tests
+  against the uncompressed psum.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compress_grads(grads, err_state):
+    """Error-feedback int8 round trip. Returns (grads', new_err_state)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(one, grads, err_state)
+    g2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    e2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return g2, e2
+
+
+def psum_compressed(x: jax.Array, axis_name: str) -> jax.Array:
+    """Mean-reduce with int8 payload / int32 accumulation (inside shard_map).
+
+    The per-shard scale is max-reduced first so all shards share one scale
+    (one tiny f32 all-reduce + one int32 all-reduce of the payload).
+    """
+    n = jax.lax.psum(1, axis_name)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale / n

@@ -1,0 +1,100 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code annotates every parameter with logical axis names (models/common.P);
+this module turns those into NamedShardings for a concrete mesh:
+
+    RULES (ordered; first applicable wins, one mesh axis used at most once
+    per tensor, divisibility checked — e.g. kv_heads=4 on a 16-way model
+    axis falls back to replicated rather than failing):
+
+        vocab    -> model        (embedding/logits vocab-parallel)
+        mlp      -> model        (FFN tensor-parallel)
+        heads    -> model        (attention head-parallel)
+        kv_heads -> model        (when divisible)
+        experts  -> model        (expert parallelism)
+        embed    -> None         (d_model replicated across model axis)
+        layers   -> None         (scan dim)
+
+Batch/activation sharding: batch -> ("pod","data") when divisible; for
+batch=1 long-context decode the *sequence* dim of activations/caches is
+sharded over the data axis instead (sequence parallelism).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+#: logical axis -> candidate mesh axis (None = replicate)
+DEFAULT_RULES: Tuple[Tuple[str, Optional[str]], ...] = (
+    ("vocab", "model"),
+    ("mlp", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("experts", "model"),
+    ("embed", None),
+    ("layers", None),
+)
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh: Mesh, rules=DEFAULT_RULES) -> PS:
+    """Build a PartitionSpec for one tensor, enforcing divisibility and
+    one-use-per-mesh-axis."""
+    rule_map = dict(rules)
+    used = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        target = rule_map.get(ax) if ax is not None else None
+        if (target is not None and target in mesh.shape and target not in used
+                and dim % _mesh_axis_size(mesh, target) == 0):
+            parts.append(target)
+            used.add(target)
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PS(*parts)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=DEFAULT_RULES):
+    """Map spec/axes trees -> NamedSharding tree (same structure)."""
+    def one(axes, like):
+        return NamedSharding(mesh, spec_for_axes(tuple(axes), tuple(like.shape),
+                                                 mesh, rules))
+    return jax.tree.map(one, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, seq_len: int,
+               extra_dims: int = 0) -> PS:
+    """Sharding for (B, S, ...) activations/inputs.
+
+    Prefers batch over ("pod","data"); falls back to sequence sharding
+    (SP) for small batches (long-context decode with batch=1).
+    """
+    dp_axes = [a for a in ("pod", "data") if a in mesh.shape]
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    if global_batch % dp == 0 and global_batch >= dp:
+        return PS(tuple(dp_axes), *([None] * (1 + extra_dims)))
+    if seq_len % dp == 0:
+        return PS(None, tuple(dp_axes), *([None] * extra_dims))
+    return PS()
+
+
+def cache_spec(mesh: Mesh, batch: int, seq_len: int, kv_heads: int) -> dict:
+    """Shardings for KV-cache-like (B,S,KH,D) buffers: batch->data when
+    divisible, else sequence->data (SP); kv heads->model when divisible."""
+    dp_axes = [a for a in ("pod", "data") if a in mesh.shape]
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    model = mesh.shape.get("model", 1)
+    kh = "model" if (kv_heads % model == 0) else None
+    if batch % dp == 0 and batch >= dp:
+        return {"batch_axis": tuple(dp_axes), "seq_axis": None, "kv_axis": kh}
+    return {"batch_axis": None, "seq_axis": tuple(dp_axes), "kv_axis": kh}

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the CORDIC activation kernels.
+
+The oracle is the *bit-accurate* fixed-point pipeline from repro.core.cordic
+(which is itself validated against the paper's claims), evaluated with plain
+jnp ops — no pallas. Kernel tests assert the pallas output is bit-identical
+on the integer path and exactly equal on the float path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixed_point as fp
+from repro.core import sigmoid as S
+from repro.core.cordic import FixedConfig, MRSchedule, PAPER_FIXED, PAPER_SCHEDULE
+
+
+def sigmoid_ref(x: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
+                cfg: FixedConfig = PAPER_FIXED) -> jax.Array:
+    """Paper pipeline, clamp contract (|x| <= 1)."""
+    return S.sigmoid_cordic_fixed(x, sched, cfg, clamp=True)
+
+
+def tanh_ref(x: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
+             cfg: FixedConfig = PAPER_FIXED) -> jax.Array:
+    return S.tanh_cordic_fixed(x, sched, cfg, clamp=True)
+
+
+def silu_ref(x: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
+             cfg: FixedConfig = PAPER_FIXED) -> jax.Array:
+    """x * sigmoid(x) with the wide-range sigmoid (pre-activations exceed 1)."""
+    return x * S.sigmoid_cordic_wide(x, sched, cfg)
+
+
+def sigmoid_wide_ref(x: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
+                     cfg: FixedConfig = PAPER_FIXED) -> jax.Array:
+    return S.sigmoid_cordic_wide(x, sched, cfg)
+
+
+def sigmoid_q_ref(x_q: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
+                  cfg: FixedConfig = PAPER_FIXED) -> jax.Array:
+    """Integer-in/integer-out oracle (Q2.14 codes)."""
+    from repro.core.cordic import sigmoid_mr_q
+
+    return sigmoid_mr_q(x_q, sched, cfg)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input-shape) cell this lowers + compiles the real
+step function (train_step for train shapes, serve prefill/decode for the
+others) against ShapeDtypeStruct inputs on:
+
+    * the single-pod production mesh  (16, 16)   ("data", "model")
+    * the two-pod mesh               (2, 16, 16) ("pod", "data", "model")
+
+and records memory_analysis / cost_analysis / per-chip collective bytes
+(parsed from the compiled SPMD HLO) to JSON for EXPERIMENTS.md and the
+roofline report.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+    python -m repro.launch.dryrun --all --out results/dryrun
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, shape_applicable
+from repro.launch import hlo_analysis as hlo
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.serve import engine as serve_engine
+from repro.train import step as step_lib
+
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               remat: str = "full", act_impl: str = "cordic_fixed",
+               attn_chunk: int = 2048, score_dtype: str = "f32",
+               kv_shard: str = "auto", accum: int = 1, zero1: bool = False,
+               pad_heads_to: int = 0, slstm_state: str = "auto",
+               mixer_chunk: int = 0, keep_hlo: bool = False) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    cfg = configs.get_config(arch, act_impl=act_impl)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    cfg = dataclasses.replace(cfg, remat=remat, attn_chunk=attn_chunk,
+                              score_dtype=score_dtype, kv_shard=kv_shard,
+                              pad_heads_to=pad_heads_to,
+                              slstm_state=slstm_state)
+    if mixer_chunk:
+        if cfg.xlstm is not None:
+            cfg = dataclasses.replace(
+                cfg, xlstm=dataclasses.replace(cfg.xlstm, chunk=mixer_chunk))
+        if cfg.ssm is not None:
+            cfg = dataclasses.replace(
+                cfg, ssm=dataclasses.replace(cfg.ssm, chunk=mixer_chunk))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            state_shapes = sp.abstract_train_state(cfg)
+            state_sh = sp.state_shardings(cfg, mesh, state_shapes, zero1=zero1)
+            batch_specs = sp.train_input_specs(cfg, shape)
+            batch_sh = sp.batch_shardings(cfg, mesh, shape, batch_specs)
+            fn = step_lib.make_train_step(cfg, adamw.AdamWConfig(), accum=accum)
+            scalar = NamedSharding(mesh, PS())  # prefix: replicated metrics
+            jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, scalar),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_specs)
+        elif shape.kind == "prefill":
+            params_shapes = sp.abstract_params(cfg, dtype=jnp.bfloat16)
+            params_sh = sp.params_shardings(cfg, mesh, params_shapes)
+            cache_shapes = sp.abstract_cache(cfg, shape.global_batch,
+                                             shape.seq_len)
+            cache_sh = sp.cache_shardings(cfg, mesh, cache_shapes, shape)
+            batch_specs = sp.prefill_input_specs(cfg, shape)
+            batch_sh = sp.batch_shardings(cfg, mesh, shape, batch_specs)
+            fn = serve_engine.make_prefill_step(cfg)
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            dpn = 1
+            for a in dp:
+                dpn *= mesh.shape[a]
+            b_ax = dp if shape.global_batch % dpn == 0 else None
+            v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+            logits_sh = NamedSharding(mesh, PS(b_ax, v_ax))
+            jitted = jax.jit(fn, in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=((logits_sh, cache_sh)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, cache_shapes, batch_specs)
+        else:  # decode
+            params_shapes = sp.abstract_params(cfg, dtype=jnp.bfloat16)
+            params_sh = sp.params_shardings(cfg, mesh, params_shapes)
+            cache_shapes = sp.abstract_cache(cfg, shape.global_batch,
+                                             shape.seq_len)
+            cache_sh = sp.cache_shardings(cfg, mesh, cache_shapes, shape)
+            tok_specs = sp.decode_input_specs(cfg, shape)
+            tok_sh = sp.batch_shardings(cfg, mesh, shape,
+                                        {"t": tok_specs})["t"]
+            fn = serve_engine.make_decode_step(cfg)
+            dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+            dpn = 1
+            for a in dp:
+                dpn *= mesh.shape[a]
+            out_tok_sh = NamedSharding(
+                mesh, PS(dp) if shape.global_batch % dpn == 0
+                and shape.global_batch >= dpn else PS())
+            jitted = jax.jit(fn, in_shardings=(params_sh, cache_sh, tok_sh),
+                             out_shardings=(out_tok_sh, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shapes, cache_shapes, tok_specs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo_text = compiled.as_text()
+    coll = hlo.collective_bytes(hlo_text)          # raw (scan-body-once)
+    cost = hlo.cost_analysis_dict(compiled)        # raw XLA cost analysis
+    mem = _mem_analysis_dict(compiled)
+
+    # scan-corrected accounting (hlo_cost): while-loop trip multipliers —
+    # raw cost_analysis counts a lax.scan body once (tests/test_hlo_cost.py)
+    from repro.launch import hlo_cost
+
+    corrected = hlo_cost.analyze(hlo_text)
+    flops = corrected.get("flops", 0.0)
+    hbm_bytes = corrected.get("hbm_bytes", 0.0)
+    coll_bytes = corrected.get("collective_weighted_bytes", 0.0)
+    terms = hlo.roofline_terms(flops, hbm_bytes, coll_bytes)
+
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    model_flops = 6 * pc["active"] * tokens
+    if shape.kind == "train":
+        model_flops *= 1  # 6ND already includes fwd+bwd for train
+    else:
+        model_flops = 2 * pc["active"] * tokens  # fwd only
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": list(mesh.devices.shape), "devices": int(n_dev),
+        "status": "ok", "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_chip": flops, "hbm_bytes_per_chip": hbm_bytes,
+        "collective": {
+            "per_kind_bytes": corrected.get("collective_bytes_by_kind", {}),
+            "op_counts": corrected.get("collective_op_counts", {}),
+            "weighted_bytes": coll_bytes,
+        },
+        "raw_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes_accessed", 0.0),
+            "collective_weighted_bytes": coll["weighted_bytes"],
+            "note": "XLA counts while bodies once; see hlo_cost.py",
+        },
+        "memory_analysis": mem,
+        "roofline": terms,
+        "params_total": pc["total"], "params_active": pc["active"],
+        "tokens_per_step": tokens,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / flops if flops else None,
+    }
+    if keep_hlo:
+        rec["hlo_lines"] = len(hlo_text.splitlines())
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--act-impl", default="cordic_fixed")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    results = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp, remat=args.remat,
+                                 act_impl=args.act_impl)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[dryrun] OK   {tag}: compile {rec['compile_s']}s "
+                          f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+                          f"coll {r['collective_s']:.3e}s dom={r['dominant']}")
+                    if rec["memory_analysis"]:
+                        print(f"         mem: {rec['memory_analysis']}")
+                else:
+                    print(f"[dryrun] SKIP {tag}: {rec['reason']}")
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "error", "error": repr(e),
+                       "trace": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAIL {tag}: {e!r}")
+            results.append(rec)
+            sys.stdout.flush()
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {args.out}")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,107 @@
+"""HLO-level analysis for the dry-run: collective-byte accounting and
+roofline terms.
+
+The compiled module is SPMD (per-device shapes), so every parsed byte count
+is *per chip*. Roofline terms (TPU v5e targets):
+
+    compute   = flops_per_chip / 197e12        [bf16 MXU peak]
+    memory    = bytes_per_chip / 819e9         [HBM bandwidth]
+    collective= sum(factor_op * bytes_op) / 50e9   [per-link ICI]
+
+factor: all-reduce moves 2x its buffer through each chip (reduce+broadcast
+phases of a ring), all-gather / reduce-scatter / all-to-all move ~1x
+((n-1)/n ~ 1), collective-permute exactly 1x.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+# e.g.:  %all-gather.12 = bf16[4,1024,128]{2,1,0} all-gather(...)
+#        ROOT %t = (f32[8,16]{...}, f32[8]{...}) tuple(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|ragged-all-to-all)(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-chip collective traffic by op kind, plus the weighted total.
+
+    `-done` ops are skipped (the `-start` carries the shape) to avoid double
+    counting async pairs; sync ops appear once anyway.
+    """
+    per_kind: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        b = _shape_bytes(dtype, dims)
+        per_kind[kind] += b
+        counts[kind] += 1
+    weighted = sum(_COLL_FACTOR[k] * v for k, v in per_kind.items())
+    return {"per_kind_bytes": dict(per_kind), "op_counts": dict(counts),
+            "weighted_bytes": weighted}
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   coll_weighted_bytes: float) -> Dict[str, float]:
+    compute = flops_per_chip / PEAK_FLOPS
+    memory = hbm_bytes_per_chip / HBM_BW
+    collective = coll_weighted_bytes / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms["dominant"] = dom
+    terms["bound_s"] = bound
+    terms["roofline_fraction"] = compute / bound if bound > 0 else 0.0
+    return terms
+
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize compiled.cost_analysis() across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k in ("flops", "bytes accessed", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    # per-memory-space byte entries if present
+    for k, v in ca.items():
+        if isinstance(k, str) and k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out

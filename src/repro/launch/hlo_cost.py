@@ -1,0 +1,253 @@
+"""Scan-corrected cost accounting from compiled HLO text.
+
+XLA's HloCostAnalysis (what ``compiled.cost_analysis()`` reports) counts a
+``while`` body ONCE, regardless of trip count — so any model whose layers
+run under ``lax.scan`` (every full config here: that is how 64-layer models
+compile to O(1) HLO) under-reports flops/bytes/collective traffic by the
+layer count. Verified empirically in tests/test_hlo_cost.py (scan vs
+unrolled tiny model).
+
+This module re-derives the three roofline inputs from the compiled module
+*text* with loop-trip multipliers:
+
+    1. parse HLO computations, building a per-computation symbol table
+       (operand types are not inlined in modern dumps);
+    2. extract each while loop's trip count from the constant bound in its
+       condition computation;
+    3. propagate execution-count multipliers through the call graph
+       (while bodies/conds, fusions, reducers, conditionals) from ENTRY;
+    4. count per call site:
+         flops       — dot ops: 2 * prod(output) * prod(contracted dims)
+                       (+1 flop/element for elementwise arithmetic ops),
+         hbm bytes   — operand + output bytes of ops at *unfused* level
+                       (fusion-internal ops do not touch HBM),
+         collectives — all-reduce/all-gather/reduce-scatter/all-to-all/
+                       collective-permute payload bytes (weighted: AR x2).
+
+Caveats (see EXPERIMENTS.md §Roofline): byte counts model fusion-boundary
+HBM traffic of the CPU-backend module, an upper bound on a TPU module's;
+trip counts use the max s32 constant in the loop condition (exact for
+lax.scan / fori_loop lowerings, which is all this codebase emits).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+_COLL_FACTOR = {"all-reduce": 2.0}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "logistic", "log", "rsqrt", "sqrt", "negate",
+    "compare", "select", "and", "or", "xor", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "floor", "abs",
+    "round-nearest-afz", "clamp", "exponential-minus-one",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            total += _numel(dims) * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "type_str", "op", "line")
+
+    def __init__(self, name, type_str, op, line):
+        self.name, self.type_str, self.op, self.line = name, type_str, op, line
+
+
+def _parse(hlo: str):
+    """-> (comps: name -> [Op], entry_name)."""
+    comps: Dict[str, List[_Op]] = {}
+    cur: List[_Op] = []
+    cur_name = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr:
+            cur_name = hdr.group(2)
+            cur = comps.setdefault(cur_name, [])
+            if hdr.group(1):
+                entry = cur_name
+            continue
+        if line == "}":
+            cur_name = None
+            continue
+        if cur_name is None:
+            continue
+        d = _DEF_RE.match(line)
+        if d:
+            cur.append(_Op(d.group(1), d.group(2), d.group(3), line))
+        else:
+            # parameter lines: "%p = f32[2,3]{1,0} parameter(0)" match above;
+            # anything else (attrs continuation) appended to last op's line
+            if cur:
+                cur[-1].line += " " + line
+    return comps, entry
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = _parse(hlo)
+    if entry is None:
+        return {}
+
+    symtab = {name: {op.name: op.type_str for op in ops}
+              for name, ops in comps.items()}
+
+    def trips_of(cond: str) -> int:
+        best = 1
+        for op in comps.get(cond, ()):
+            for c in _CONST_RE.findall(op.line):
+                best = max(best, int(c))
+        return best
+
+    # multiplier propagation through the call graph
+    mult: Dict[str, float] = defaultdict(float)
+    fused: Dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    order = [entry]
+    qi = 0
+    while qi < len(order):
+        name = order[qi]
+        qi += 1
+        m = mult[name]
+        for op in comps.get(name, ()):
+            if op.op == "while":
+                w = _WHILE_ATTR.search(op.line)
+                if w:
+                    t = trips_of(w.group(1))
+                    for callee in (w.group(2), w.group(1)):
+                        if callee in comps:
+                            mult[callee] += m * t
+                            if callee not in order:
+                                order.append(callee)
+                continue
+            callees = _CALLS_RE.findall(op.line)
+            b = _BRANCHES_RE.search(op.line)
+            if b:
+                callees += [c.strip().lstrip("%") for c in b.group(1).split(",")]
+            for callee in callees:
+                if callee in comps:
+                    mult[callee] += m
+                    fused[callee] = True  # fusion/reducer: flops yes, bytes no
+                    if callee not in order:
+                        order.append(callee)
+
+    def op_flops(op: _Op, comp: str) -> float:
+        if op.op == "dot":
+            out_n = _numel(_SHAPE_RE.search(op.type_str).group(2)) \
+                if _SHAPE_RE.search(op.type_str) else 0
+            cm = _CONTRACT_RE.search(op.line)
+            args = op.line.split("dot(", 1)[1] if "dot(" in op.line else ""
+            names = _OPERANDS_RE.findall(args.split(")", 1)[0])
+            if not (cm and names):
+                return 0.0
+            lhs_t = symtab[comp].get(names[0], "")
+            sh = _SHAPE_RE.search(lhs_t)
+            if not sh:
+                return 0.0
+            lhs_dims = [int(d) for d in sh.group(2).split(",") if d]
+            k = 1
+            for i in (int(i) for i in cm.group(1).split(",") if i):
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+            return 2.0 * out_n * k
+        if op.op in _ELEMENTWISE:
+            sh = _SHAPE_RE.search(op.type_str)
+            return float(_numel(sh.group(2))) if sh else 0.0
+        return 0.0
+
+    def op_bytes(op: _Op, comp: str) -> float:
+        """TPU-fusion-realistic HBM byte model.
+
+        XLA:TPU fuses elementwise/broadcast/reduce chains into their
+        producers, so those intermediates never hit HBM; what does:
+
+          * outputs of MXU/layout/memory ops (dot, reduce(-window), dynamic
+            slice/update, gather/scatter, transpose/reshape/copy, concat,
+            pad, slice, rng, collectives, custom-call) — written once;
+          * operands of dot and collective ops — read from HBM (dots do not
+            fuse their operands; a softmax-ed score matrix is re-read by
+            the AV matmul even though the softmax itself fused away).
+
+        The CPU-backend module fuses less than TPU would, so applying this
+        model to its op graph approximates the TPU traffic; EXPERIMENTS.md
+        documents it as an estimate used consistently across variants.
+        """
+        if op.op in _SKIP_BYTES_OPS or op.op in _ELEMENTWISE \
+                or op.op in ("broadcast", "reverse", "map"):
+            return 0.0
+        total = float(_type_bytes(op.type_str))
+        if op.op == "dot" or op.op.replace("-start", "") in _COLL_KINDS:
+            args = op.line.split("(", 1)[1] if "(" in op.line else ""
+            args = args.split(")", 1)[0]
+            for nm in _OPERANDS_RE.findall(args):
+                total += _type_bytes(symtab[comp].get(nm, ""))
+        return total
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes: Dict[str, float] = defaultdict(float)
+    coll_counts: Dict[str, float] = defaultdict(float)
+    for name in order:
+        m = mult[name]
+        if m <= 0:
+            continue
+        in_fused = fused[name]
+        for op in comps.get(name, ()):
+            flops += m * op_flops(op, name)
+            if not in_fused:
+                hbm_bytes += m * op_bytes(op, name)
+            base = op.op.replace("-start", "")
+            if base in _COLL_KINDS and not op.op.endswith("-done"):
+                coll_bytes[base] += m * _type_bytes(op.type_str)
+                coll_counts[base] += m
+
+    weighted = sum(_COLL_FACTOR.get(k, 1.0) * v for k, v in coll_bytes.items())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes_by_kind": dict(coll_bytes),
+        "collective_op_counts": dict(coll_counts),
+        "collective_weighted_bytes": weighted,
+        "num_computations": len(comps),
+    }

@@ -1,0 +1,103 @@
+"""§Perf hillclimb harness: re-lower a cell under named knob variants and
+report the roofline-term deltas vs the paper-faithful baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell yi-9b:decode_32k \
+        --variant baseline --variant bf16_scores --out results/perf_yi.json
+
+Each variant is a named dict of lower_cell kwargs; EXPERIMENTS.md §Perf
+narrates the hypothesis → change → before/after for each.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+VARIANTS = {
+    # paper-faithful framework defaults
+    "baseline": {},
+    # H1: kill the f32 cache copy; accumulate scores in f32 on the MXU
+    "bf16_scores": {"score_dtype": "bf16_mxu"},
+    # H2: flash-decode SP — shard KV cache seq dim over the model axis
+    "kv_seq_shard": {"score_dtype": "bf16_mxu", "kv_shard": "seq_model"},
+    "kv_seq_shard_f32": {"kv_shard": "seq_model"},
+    # train-side knobs
+    "no_remat": {"remat": "none"},
+    "remat_dots": {"remat": "dots"},
+    "accum4": {"accum": 4},
+    "accum4_dots": {"accum": 4, "remat": "dots"},
+    "zero1": {"zero1": True},
+    # H3: MaxText-style head padding -> awkward head counts become 16-way
+    # TP-shardable (kills replicated attention projections / cache reads)
+    "pad_heads": {"pad_heads_to": 16},
+    "pad_heads_bf16": {"pad_heads_to": 16, "score_dtype": "bf16_mxu"},
+    "pad_heads_full": {"pad_heads_to": 16, "score_dtype": "bf16_mxu",
+                       "kv_shard": "seq_model"},
+    "zero1_dots": {"zero1": True, "remat": "dots"},
+    "chunk512": {"attn_chunk": 512},
+    "chunk8k": {"attn_chunk": 8192},
+    # activation implementation comparison (paper technique vs exact)
+    "act_exact": {"act_impl": "exact"},
+    "act_pallas": {"act_impl": "cordic_pallas"},
+    "act_float": {"act_impl": "cordic_float"},
+    # H4: replicate the sLSTM recurrent state across TP (xLSTM-specific):
+    # trade tiny redundant compute for zero per-timestep collectives
+    "slstm_rep": {"slstm_state": "replicated"},
+    "mlstm_chunk128": {"mixer_chunk": 128},
+    "mlstm_chunk64": {"mixer_chunk": 64},
+    "xlstm_best": {"slstm_state": "replicated", "mixer_chunk": 128},
+    "accum4_fixed": {"accum": 4},
+    "slstm_rep_dots": {"slstm_state": "replicated", "remat": "dots"},
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", action="append", required=True,
+                    choices=list(VARIANTS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import lower_cell  # sets XLA_FLAGS on import
+
+    arch, shape = args.cell.split(":")
+    results = []
+    base_terms = None
+    for name in args.variant:
+        kw = VARIANTS[name]
+        try:
+            rec = lower_cell(arch, shape, multi_pod=args.multi_pod, **kw)
+            rec["variant"] = name
+            rec["knobs"] = kw
+            t = rec["roofline"]
+            line = (f"[perf] {arch}:{shape} {name:18s} "
+                    f"compute {t['compute_s']:.3e}  memory {t['memory_s']:.3e}  "
+                    f"coll {t['collective_s']:.3e}  dom={t['dominant']}")
+            if base_terms is None and name == "baseline":
+                base_terms = t
+            elif base_terms is not None:
+                d = base_terms[base_terms["dominant"]]
+                n = t[base_terms["dominant"]]
+                line += f"  [dominant-term delta vs baseline: {100 * (1 - n / d):+.1f}%]"
+            print(line)
+        except Exception as e:
+            rec = {"variant": name, "arch": arch, "shape": shape,
+                   "status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-1500:]}
+            print(f"[perf] {arch}:{shape} {name}: FAILED {e!r}")
+        results.append(rec)
+        sys.stdout.flush()
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""Serving launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --smoke \
+        --requests 8 --slots 4
+
+Boots the slot-based continuous-batching engine for a registered arch
+(reduced config on CPU; the full-config decode distribution is what
+repro.launch.dryrun lowers for the decode shapes).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--act-impl", default="cordic_fixed")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke(args.arch, act_impl=args.act_impl) if args.smoke
+           else configs.get_config(args.arch, act_impl=args.act_impl))
+    if cfg.input_mode != "tokens":
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, input_mode="tokens")
+    print(f"[serve] arch={cfg.name} slots={args.slots}")
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        r = Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 12))).astype(np.int32),
+                    max_new_tokens=args.max_new)
+        reqs.append(r)
+        eng.submit(r)
+    t0 = time.time()
+    steps = 0
+    while eng.step():
+        steps += 1
+    total = sum(len(r.out) for r in reqs)
+    print(f"[serve] {len(reqs)} requests, {total} tokens, {steps} steps, "
+          f"{time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

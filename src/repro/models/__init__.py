@@ -1,0 +1,2 @@
+"""Model substrate: generic decoder + block library."""
+from repro.models import transformer  # noqa: F401

@@ -1,0 +1,318 @@
+"""Attention blocks: GQA (optionally biased QKV) and MLA (DeepSeek-V2 style
+multi-head latent attention with compressed KV cache).
+
+Both expose:
+    *_spec(cfg)                    -> param spec tree (common.P leaves)
+    *_apply(params, x, cfg, ...)   -> (y, new_cache)
+
+Training/prefill uses query-chunked causal attention (flash-style memory
+behaviour in pure jnp: no S x S materialization beyond a chunk row), which
+also keeps the sequence dimension shardable for SP. Decode attends a single
+query against the cache; MLA decode uses the absorbed-projection form so the
+cache stays compressed (the whole point of MLA).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as cm
+from repro.models.common import P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal attention core (shared by GQA / MLA prefill)
+# ---------------------------------------------------------------------------
+def _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype: str = "f32"):
+    """q: (B,c,KH,G,D)  k/v: (B,T,KH,D)  -> (B,c,KH,G,D), full-row softmax.
+
+    score_dtype="f32": cast operands to f32 (exact reference; on bf16 caches
+    this materializes an f32 copy of K/V — measurably bad at decode scale).
+    score_dtype="bf16_mxu": keep operands in their storage dtype and
+    accumulate in f32 via preferred_element_type — the MXU-native mode; no
+    K/V copies, identical accumulation width.
+    """
+    if score_dtype == "f32":
+        q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q32, k32) * scale
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    mask = (k_pos[None, :] <= q_pos[:, None])[None, None, None]  # (1,1,1,c,T)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if score_dtype == "f32":
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v32)
+    else:
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+    return o
+
+
+def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
+                     score_dtype: str = "f32"):
+    """Causal attention with query chunking.
+
+    q: (B,S,KH,G,D) grouped queries; k/v: (B,T,KH,D).
+    q_offset: absolute position of q[0] (decode/prefill continuation).
+    k_len: number of valid cache positions (defaults to T).
+    """
+    B, S, KH, G, D = q.shape
+    Dv = v.shape[-1]        # may differ from D (MLA: qk=192, v=128)
+    T = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    k_pos = jnp.arange(T)
+    if k_len is not None:
+        k_pos = jnp.where(jnp.arange(T) < k_len, jnp.arange(T), T + 1)
+
+    if S <= chunk:
+        q_pos = q_offset + jnp.arange(S)
+        o = _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype)
+        return o.astype(q.dtype)
+
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    qr = q.reshape(B, n, chunk, KH, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(i, qc):
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        return _attend_block(qc, k, v, q_pos, k_pos, scale, score_dtype)
+
+    o = jax.lax.map(lambda args: body(*args), (jnp.arange(n), qr))
+    return o.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KH, G, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def _padded_heads(cfg):
+    """(H', KH') after optional padding to a TP-friendly multiple.
+
+    Padding head counts (MaxText-style) keeps the head dimension shardable
+    on wide model axes when the arch's native count is not divisible
+    (e.g. 40 q heads / 8 kv heads on 16-way TP). KV heads pad up to the
+    multiple and q heads follow as H' = KH' * G (G = original group size),
+    preserving the kv-major q->kv mapping for the real heads.
+
+    Forward exactness: padded k/v projections are zero, so padded heads
+    attend uniformly over zero values -> zero output -> zero contribution
+    through wo, whatever its padded rows hold (asserted in tests). Under
+    training the padded rows become extra capacity (documented in DESIGN).
+    """
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+    p = cfg.pad_heads_to
+    if p and p > 1:
+        G = H // KH
+        KH = -(-KH // p) * p
+        H = KH * G
+    return H, KH
+
+
+def gqa_spec(cfg) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H, KH = _padded_heads(cfg)
+    spec = {
+        "wq": P((d, H, hd), ("embed", "heads", None)),
+        "wk": P((d, KH, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, KH, hd), ("embed", "kv_heads", None)),
+        "wo": P((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((H, hd), ("heads", None), init="zeros")
+        spec["bk"] = P((KH, hd), ("kv_heads", None), init="zeros")
+        spec["bv"] = P((KH, hd), ("kv_heads", None), init="zeros")
+    return spec
+
+
+def gqa_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    _, KH = _padded_heads(cfg)
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, KH, hd), dtype),
+        "v": jnp.zeros((batch, max_len, KH, hd), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_apply(params, x, cfg, *, cache: Optional[dict] = None,
+              positions: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,d). With cache: writes S new positions at cache['idx']."""
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    if cfg.pad_heads_to:
+        # padded layout keeps the kv-major grouping: H' = KH' * G_orig
+        KH = _padded_heads(cfg)[1]
+        G = cfg.num_heads // cfg.num_kv_heads
+        H = KH * G
+    else:
+        H, KH = cfg.num_heads, cfg.num_kv_heads
+        G = H // KH
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+
+    if positions is None:
+        offset = cache["idx"] if cache is not None else 0
+        positions = offset + jnp.arange(S)[None, :]
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        from jax.sharding import PartitionSpec as PS
+
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache["idx"], 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache["idx"], 0, 0))
+        if cfg.kv_shard == "seq_model":
+            # flash-decode SP: pin cache seq dim to the model axis; the
+            # softmax/output reductions over seq become small all-reduces
+            cands = [PS(("pod", "data"), "model", None, None),
+                     PS("data", "model", None, None),
+                     PS(None, "model", None, None)]
+            ck = cm.maybe_shard(ck, *cands)
+            cv = cm.maybe_shard(cv, *cands)
+        new_cache = {"k": ck, "v": cv, "idx": cache["idx"] + S}
+        k_full, v_full = ck.astype(x.dtype), cv.astype(x.dtype)
+        k_len = cache["idx"] + S
+        q_offset = cache["idx"]
+    else:
+        new_cache, k_full, v_full, k_len, q_offset = None, k, v, None, 0
+
+    qg = q.reshape(B, S, KH, G, hd)
+    o = causal_attention(qg, k_full, v_full, q_offset=q_offset, k_len=k_len,
+                         chunk=cfg.attn_chunk, score_dtype=cfg.score_dtype)
+    o = o.reshape(B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def mla_spec(cfg) -> Dict[str, Any]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    return {
+        "wq": P((d, H, m.qk_nope_dim + m.qk_rope_dim), ("embed", "heads", None)),
+        "wkv_a": P((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", None)),
+        "kv_norm": cm.rmsnorm_spec(m.kv_lora_rank),
+        "wkv_b": P((m.kv_lora_rank, H, m.qk_nope_dim + m.v_dim),
+                   (None, "heads", None)),
+        "wo": P((H, m.v_dim, d), ("heads", None, "embed")),
+    }
+
+
+def mla_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_project_q(params, x, cfg, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_compress(params, x, cfg, positions):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dk->bsk", x, params["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = cm.rmsnorm(params["kv_norm"], c_kv)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(params, x, cfg, *, cache: Optional[dict] = None,
+              positions: Optional[jax.Array] = None):
+    """MLA attention. Prefill decompresses K/V per chunk; decode uses the
+    absorbed form against the compressed cache."""
+    B, S, d = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    offset = cache["idx"] if cache is not None else 0
+    if positions is None:
+        positions = offset + jnp.arange(S)[None, :]
+
+    q_nope, q_rope = _mla_project_q(params, x, cfg, positions)
+    c_kv, k_rope = _mla_compress(params, x, cfg, positions)
+
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                                          (0, cache["idx"], 0))
+        cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                                          (0, cache["idx"], 0))
+        if cfg.kv_shard == "seq_model":
+            from jax.sharding import PartitionSpec as PS
+
+            cands3 = [PS(("pod", "data"), "model", None),
+                      PS("data", "model", None), PS(None, "model", None)]
+            cc = cm.maybe_shard(cc, *cands3)
+            cr = cm.maybe_shard(cr, *cands3)
+        new_cache = {"c_kv": cc, "k_rope": cr, "idx": cache["idx"] + S}
+    else:
+        new_cache = None
+
+    wkv_b = params["wkv_b"].astype(x.dtype)
+    wk_b, wv_b = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+
+    if cache is not None and S == 1:
+        # Absorbed decode: score against the compressed cache directly.
+        T = cc.shape[1]
+        q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)          # (B,1,H,L)
+        if cfg.score_dtype == "f32":
+            s = (jnp.einsum("bshl,btl->bhst", q_eff.astype(jnp.float32),
+                            cc.astype(jnp.float32))
+                 + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                              cr.astype(jnp.float32))) * scale
+        else:
+            s = (jnp.einsum("bshl,btl->bhst", q_eff, cc.astype(q_eff.dtype),
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(q_rope.dtype),
+                              preferred_element_type=jnp.float32)) * scale
+        k_len = cache["idx"] + 1
+        valid = (jnp.arange(T) < k_len)[None, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if cfg.score_dtype == "f32":
+            o_lat = jnp.einsum("bhst,btl->bshl", p, cc.astype(jnp.float32))
+        else:
+            o_lat = jnp.einsum("bhst,btl->bshl", p.astype(cc.dtype), cc,
+                               preferred_element_type=jnp.float32)
+        o = jnp.einsum("bshl,lhv->bshv", o_lat, wv_b.astype(jnp.float32))
+    else:
+        # Prefill / train: decompress K,V and run the chunked causal core.
+        src_c = cc if cache is not None else c_kv
+        src_r = cr if cache is not None else k_rope
+        T = src_c.shape[1]
+        k_nope = jnp.einsum("btl,lhk->bthk", src_c.astype(x.dtype), wk_b)
+        v = jnp.einsum("btl,lhv->bthv", src_c.astype(x.dtype), wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(src_r[:, :, None, :].astype(x.dtype),
+                                      (B, T, H, m.qk_rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, jnp.broadcast_to(
+            q_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+        qg = q.reshape(B, S, H, 1, m.qk_nope_dim + m.qk_rope_dim)
+        k_len = (cache["idx"] + S) if cache is not None else None
+        o = causal_attention(qg, k, v, q_offset=offset, k_len=k_len,
+                             chunk=cfg.attn_chunk)
+        o = o.reshape(B, S, H, m.v_dim)
+
+    y = jnp.einsum("bshv,hvd->bsd", o.astype(x.dtype), params["wo"].astype(x.dtype))
+    return y, new_cache

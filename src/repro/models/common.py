@@ -1,0 +1,153 @@
+"""Shared model components: parameter specs with logical sharding axes,
+norms, embeddings, RoPE.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every leaf is
+declared through a `P` spec that carries its *logical* axis names; the
+distributed layer (repro.distributed.sharding) maps logical axes onto mesh
+axes. Initialization is lazy-friendly: `init_params` builds real arrays,
+`jax.eval_shape(init_params, ...)` builds ShapeDtypeStructs for the dry-run
+without allocating a single byte (how 104B configs compile on one CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Logical axis vocabulary (mapped to mesh axes in distributed/sharding.py):
+#   "vocab"    — embedding/output vocab dim        -> model
+#   "mlp"      — FFN hidden dim                    -> model
+#   "heads"    — attention head dim (q)            -> model
+#   "kv_heads" — attention kv-head dim             -> model if divisible
+#   "experts"  — MoE expert dim                    -> model (expert parallel)
+#   "embed"    — d_model dims                      -> replicated
+#   "layers"   — scan-stacked layer dim            -> replicated
+#   None       — replicated
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape + logical axes + initializer."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: P, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    std = spec.scale
+    if std is None:
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(specs: Dict[str, Any], key: jax.Array, dtype=jnp.float32):
+    """Materialize a spec tree into a param tree (same structure)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_axes(specs: Dict[str, Any]):
+    """Extract the logical-axes tree (same structure as params)."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_specs(spec: Dict[str, Any], n: int) -> Dict[str, Any]:
+    """Prepend a scan 'layers' dim of size n to every leaf of a spec tree."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def maybe_shard(x: jax.Array, *candidates) -> jax.Array:
+    """Apply the first sharding-constraint candidate the ambient mesh accepts.
+
+    Model code stays mesh-agnostic: under the production mesh the constraint
+    pins GSPMD's layout choice (e.g. KV cache seq->model for flash-decode
+    SP); in meshless tests every candidate raises and x passes through.
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    for spec in candidates:
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except (RuntimeError, ValueError, TypeError):
+            continue
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * params["scale"].astype(x.dtype)
+
+
+def layernorm_spec(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones"),
+            "bias": P((d,), ("embed",), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y.astype(x.dtype) * params["scale"].astype(x.dtype)
+            + params["bias"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+def embed_spec(vocab: int, d: int) -> Dict[str, P]:
+    return {"table": P((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits projection (tied or untied table of shape (vocab, d))."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float = 1e4) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), jnp.float32)  # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs      # (..., S, d/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (...,S,1,d/2)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,57 @@
+"""MLP blocks (SwiGLU / GELU) wired to the CORDIC activation registry.
+
+`act_impl` in the model config selects how sigmoid/tanh-family
+nonlinearities are evaluated: "exact", "cordic_float", "cordic_fixed"
+(paper-faithful Q2.14), or "cordic_pallas" (the TPU kernel, which also
+enables the fused silu_mul epilogue for SwiGLU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import get_activation
+from repro.models.common import P
+
+
+def swiglu_spec(d: int, d_ff: int) -> Dict[str, Any]:
+    return {
+        "w_gate": P((d, d_ff), ("embed", "mlp")),
+        "w_up": P((d, d_ff), ("embed", "mlp")),
+        "w_down": P((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def swiglu_apply(params, x, cfg):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    if cfg.act_impl == "cordic_pallas":
+        from repro.kernels import ops as kops
+
+        h = kops.silu_mul(g, u)
+    else:
+        silu = get_activation("silu", cfg.act_impl, range_mode="reduce")
+        h = silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(x.dtype))
+
+
+def gelu_mlp_spec(d: int, d_ff: int) -> Dict[str, Any]:
+    return {
+        "w_in": P((d, d_ff), ("embed", "mlp")),
+        "b_in": P((d_ff,), ("mlp",), init="zeros"),
+        "w_out": P((d_ff, d), ("mlp", "embed")),
+        "b_out": P((d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp_apply(params, x, cfg):
+    """GELU MLP (musicgen-style). With a CORDIC impl the tanh-approx GELU
+    routes its tanh through the MR-HRC pipeline."""
+    act = get_activation("gelu_tanh" if cfg.act_impl != "exact" else "gelu",
+                         cfg.act_impl, range_mode="reduce")
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = act(h + params["b_in"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype)) \
+        + params["b_out"].astype(x.dtype)

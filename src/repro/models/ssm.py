@@ -1,0 +1,191 @@
+"""Mamba2 (SSD) block — chunked state-space scan in pure JAX.
+
+Within a chunk the SSD quadratic ("attention-like") form is used; across
+chunks a lax.scan carries the (B,H,P,N) state, so memory stays
+O(B*H*L^2 + B*H*P*N) per step instead of O(S * state). Decode is a
+single-token state update. The in-projection gate and the gated RMSNorm
+use silu/sigmoid from the CORDIC activation registry.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import get_activation
+from repro.models import common as cm
+from repro.models.common import P
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, conv_dim
+
+
+def mamba2_spec(cfg) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "in_proj": P((d, 2 * d_inner + 2 * s.n_groups * s.d_state + H),
+                     ("embed", "mlp")),
+        "conv_w": P((s.d_conv, conv_dim), (None, "mlp"), scale=0.5),
+        "conv_b": P((conv_dim,), ("mlp",), init="zeros"),
+        "dt_bias": P((H,), (None,), init="zeros"),
+        "A_log": P((H,), (None,), init="ones"),
+        "D": P((H,), (None,), init="ones"),
+        "norm": cm.rmsnorm_spec(d_inner),
+        "out_proj": P((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def _split_proj(params, x, cfg):
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(x.dtype))
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt
+
+
+def _causal_conv(params, xBC, cfg, conv_state=None):
+    """Depthwise causal conv1d (width d_conv). Returns (y, new_state)."""
+    s = cfg.ssm
+    w = params["conv_w"].astype(xBC.dtype)        # (W, C)
+    Wd = w.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    else:
+        ctx = jnp.pad(xBC, ((0, 0), (Wd - 1, 0), (0, 0)))
+    y = sum(ctx[:, i: i + xBC.shape[1], :] * w[i] for i in range(Wd))
+    y = y + params["conv_b"].astype(xBC.dtype)
+    new_state = ctx[:, -(Wd - 1):, :] if conv_state is not None else None
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, a_log, Bm, Cm, D, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P)  dt: (B,S,H)  a_log = dt*A (negative): (B,S,H)
+    Bm/Cm: (B,S,G,N). Returns y: (B,S,H,P), final state (B,H,P,N).
+    """
+    B, S, H, Pd = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:
+        # pad to a chunk multiple with inert steps: x=0, dt=0 (no input
+        # contribution), a_log=0 (decay 1 -> state preserved through pad)
+        pad = L - S % L
+        z3 = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, a_log, Bm, Cm = map(z3, (xh, dt, a_log, Bm, Cm))
+        S = S + pad
+    nc = S // L
+
+    def cr(t, shape):  # chunk reshape
+        return t.reshape(shape)
+
+    xc = cr(xh, (B, nc, L, H, Pd))
+    dtc = cr(dt, (B, nc, L, H))
+    lac = cr(a_log, (B, nc, L, H))                    # log-decay per step
+    Bc = cr(Bm, (B, nc, L, G, N))
+    Cc = cr(Cm, (B, nc, L, G, N))
+    cums = jnp.cumsum(lac, axis=2)                    # (B,nc,L,H)
+    total = cums[:, :, -1]                            # (B,nc,H)
+
+    # intra-chunk quadratic form, computed per chunk inside the scan
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]             # (L,L)
+
+    def step(h, inputs):
+        xcb, dtb, cumsb, totalb, Bb, Cb = inputs      # per-chunk slices
+        # seg_{i,j} = exp(cums_i - cums_j) for i>=j
+        seg = jnp.exp(jnp.where(causal[None, :, :, None],
+                                cumsb[:, :, None, :] - cumsb[:, None, :, :],
+                                -jnp.inf))            # (B,L,L,H) [i,j]
+        CB = jnp.einsum("blgn,bmgn->blmg", Cb, Bb)    # (B,L,L,G)
+        CBh = jnp.repeat(CB, hpg, axis=-1)            # (B,L,L,H)
+        scores = CBh * seg * dtb[:, None, :, :]       # weight dt_j
+        y_intra = jnp.einsum("blmh,bmhp->blhp", scores, xcb)
+        # inter: contribution of carried state
+        decay_in = jnp.exp(cumsb)                     # (B,L,H)
+        Ch = jnp.repeat(Cb, hpg, axis=2).reshape(Bb.shape[0], L, H, N)
+        y_inter = jnp.einsum("blhn,bhpn,blh->blhp", Ch, h, decay_in)
+        # state update
+        decay_out = jnp.exp(totalb[:, None, :] - cumsb)  # (B,L,H)
+        Bh = jnp.repeat(Bb, hpg, axis=2).reshape(Bb.shape[0], L, H, N)
+        s_new = jnp.einsum("blh,blhn,blhp->bhpn", decay_out * dtb, Bh, xcb)
+        h_next = jnp.exp(totalb)[:, :, None, None] * h + s_new
+        return h_next, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, Pd, N), xh.dtype)
+    swap = lambda t: jnp.moveaxis(t, 1, 0)            # scan over chunks
+    hN, yc = jax.lax.scan(step, h0, (swap(xc), swap(dtc), swap(cums),
+                                     swap(total), swap(Bc), swap(Cc)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, Pd)
+    y = y + xh * D[None, None, :, None]
+    return y[:, :S_orig], hN
+
+
+def mamba2_apply(params, x, cfg, *, cache: Optional[dict] = None
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,d). Train/prefill: chunked scan. Decode (S==1): state update."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = _dims(cfg)
+    B, S, d = x.shape
+    G, N, Pd = s.n_groups, s.d_state, s.head_dim
+    silu = get_activation("silu", cfg.act_impl, range_mode="reduce")
+
+    z, xBC, dt = _split_proj(params, x, cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(params, xBC, cfg, conv_state)
+    xBC = silu(xBC)
+
+    xh = xBC[..., :d_inner].reshape(B, S, H, Pd)
+    Bm = xBC[..., d_inner: d_inner + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., d_inner + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(x.dtype))   # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,) < 0
+    a_log = dt * A[None, None, :]                                  # log decay
+
+    if cache is not None and S == 1:
+        h = cache["ssm"].astype(jnp.float32)
+        decay = jnp.exp(a_log[:, 0])                               # (B,H)
+        Bh = jnp.repeat(Bm[:, 0], H // G, axis=1).reshape(B, H, N)
+        Ch = jnp.repeat(Cm[:, 0], H // G, axis=1).reshape(B, H, N)
+        upd = jnp.einsum("bh,bhn,bhp->bhpn", dt[:, 0], Bh, xh[:, 0])
+        h_new = decay[:, :, None, None] * h + upd
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+        y = y + xh[:, 0] * params["D"].astype(x.dtype)[None, :, None]
+        y = y[:, None].astype(x.dtype)                             # (B,1,H,P)
+        new_cache = {"ssm": h_new.astype(cache["ssm"].dtype), "conv": new_conv}
+    else:
+        y, hN = _ssd_chunked(xh.astype(jnp.float32), dt.astype(jnp.float32),
+                             a_log.astype(jnp.float32), Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), params["D"].astype(jnp.float32),
+                             cfg.ssm.chunk)
+        y = y.astype(x.dtype)
+        if cache is not None:
+            new_cache = {"ssm": hN.astype(cache["ssm"].dtype), "conv": new_conv}
+        else:
+            new_cache = None
+
+    yg = y.reshape(B, S, d_inner)
+    yg = cm.rmsnorm(params["norm"], yg * silu(z))
+    return jnp.einsum("bse,ed->bsd", yg, params["out_proj"].astype(x.dtype)), new_cache

@@ -1,0 +1,328 @@
+"""Generic decoder: composes attention/MoE/SSM/xLSTM blocks according to
+``cfg.block_pattern``.
+
+Runs of identical block types are parameter-stacked and executed with
+``jax.lax.scan`` so a 64-layer model lowers to O(1) HLO (essential for the
+512-device dry-runs). Zamba2-style shared blocks (one weight set applied at
+several depths, each application with its own cache) break runs and are
+applied inline.
+
+Public API:
+    model_spec(cfg)                      -> param spec tree
+    init(cfg, key, dtype)                -> params (jax.eval_shape-able)
+    init_cache(cfg, batch, max_len)      -> decode cache tree
+    apply(params, batch, cfg, cache)     -> (logits, aux, new_cache)
+    loss_fn(params, batch, cfg)          -> (loss, metrics)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlpm
+from repro.models import moe as moem
+from repro.models import ssm as ssmm
+from repro.models import xlstm as xlm
+from repro.models.common import P
+
+
+# ---------------------------------------------------------------------------
+# Block registry
+# ---------------------------------------------------------------------------
+def _dense_spec(cfg):
+    mlp_spec = (mlpm.swiglu_spec(cfg.d_model, cfg.d_ff) if cfg.mlp_kind == "swiglu"
+                else mlpm.gelu_mlp_spec(cfg.d_model, cfg.d_ff))
+    return {"ln1": cm.rmsnorm_spec(cfg.d_model), "attn": attn.gqa_spec(cfg),
+            "ln2": cm.rmsnorm_spec(cfg.d_model), "mlp": mlp_spec}
+
+
+def _dense_apply(params, x, cfg, cache, positions):
+    h, nc = attn.gqa_apply(params["attn"], cm.rmsnorm(params["ln1"], x, cfg.norm_eps),
+                           cfg, cache=cache, positions=positions)
+    x = x + h
+    h_in = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
+    h = (mlpm.swiglu_apply(params["mlp"], h_in, cfg) if cfg.mlp_kind == "swiglu"
+         else mlpm.gelu_mlp_apply(params["mlp"], h_in, cfg))
+    return x + h, jnp.zeros((), jnp.float32), nc
+
+
+def _mla_spec_factory(ffn: str):
+    def spec(cfg):
+        out = {"ln1": cm.rmsnorm_spec(cfg.d_model), "attn": attn.mla_spec(cfg),
+               "ln2": cm.rmsnorm_spec(cfg.d_model)}
+        out["ffn"] = (moem.moe_spec(cfg) if ffn == "moe"
+                      else mlpm.swiglu_spec(cfg.d_model, cfg.d_ff_dense))
+        return out
+    return spec
+
+
+def _mla_apply_factory(ffn: str):
+    def apply(params, x, cfg, cache, positions):
+        h, nc = attn.mla_apply(params["attn"],
+                               cm.rmsnorm(params["ln1"], x, cfg.norm_eps),
+                               cfg, cache=cache, positions=positions)
+        x = x + h
+        h_in = cm.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            h, aux = moem.moe_apply(params["ffn"], h_in, cfg)
+        else:
+            h, aux = mlpm.swiglu_apply(params["ffn"], h_in, cfg), jnp.zeros((), jnp.float32)
+        return x + h, aux, nc
+    return apply
+
+
+def _gqa_moe_spec(cfg):
+    return {"ln1": cm.rmsnorm_spec(cfg.d_model), "attn": attn.gqa_spec(cfg),
+            "ln2": cm.rmsnorm_spec(cfg.d_model), "ffn": moem.moe_spec(cfg)}
+
+
+def _gqa_moe_apply(params, x, cfg, cache, positions):
+    h, nc = attn.gqa_apply(params["attn"], cm.rmsnorm(params["ln1"], x, cfg.norm_eps),
+                           cfg, cache=cache, positions=positions)
+    x = x + h
+    h, aux = moem.moe_apply(params["ffn"], cm.rmsnorm(params["ln2"], x, cfg.norm_eps), cfg)
+    return x + h, aux, nc
+
+
+def _mamba_spec(cfg):
+    return {"ln": cm.rmsnorm_spec(cfg.d_model), "mixer": ssmm.mamba2_spec(cfg)}
+
+
+def _mamba_apply(params, x, cfg, cache, positions):
+    h, nc = ssmm.mamba2_apply(params["mixer"], cm.rmsnorm(params["ln"], x, cfg.norm_eps),
+                              cfg, cache=cache)
+    return x + h, jnp.zeros((), jnp.float32), nc
+
+
+def _mlstm_spec(cfg):
+    return {"ln": cm.rmsnorm_spec(cfg.d_model), "mixer": xlm.mlstm_spec(cfg)}
+
+
+def _mlstm_apply(params, x, cfg, cache, positions):
+    h, nc = xlm.mlstm_apply(params["mixer"], cm.rmsnorm(params["ln"], x, cfg.norm_eps),
+                            cfg, cache=cache)
+    return x + h, jnp.zeros((), jnp.float32), nc
+
+
+def _slstm_spec(cfg):
+    return {"ln": cm.rmsnorm_spec(cfg.d_model), "mixer": xlm.slstm_spec(cfg)}
+
+
+def _slstm_apply(params, x, cfg, cache, positions):
+    h, nc = xlm.slstm_apply(params["mixer"], cm.rmsnorm(params["ln"], x, cfg.norm_eps),
+                            cfg, cache=cache)
+    return x + h, jnp.zeros((), jnp.float32), nc
+
+
+def _gqa_cache(cfg, batch, max_len, dtype):
+    return attn.gqa_init_cache(cfg, batch, max_len, dtype)
+
+
+def _mla_cache(cfg, batch, max_len, dtype):
+    return attn.mla_init_cache(cfg, batch, max_len, dtype)
+
+
+def _mamba_cache(cfg, batch, max_len, dtype):
+    return ssmm.mamba2_init_cache(cfg, batch)
+
+
+def _mlstm_cache(cfg, batch, max_len, dtype):
+    return xlm.mlstm_init_cache(cfg, batch)
+
+
+def _slstm_cache(cfg, batch, max_len, dtype):
+    return xlm.slstm_init_cache(cfg, batch)
+
+
+BLOCKS = {
+    "dense": (_dense_spec, _dense_apply, _gqa_cache),
+    "mla_dense": (_mla_spec_factory("dense"), _mla_apply_factory("dense"), _mla_cache),
+    "mla_moe": (_mla_spec_factory("moe"), _mla_apply_factory("moe"), _mla_cache),
+    "gqa_moe": (_gqa_moe_spec, _gqa_moe_apply, _gqa_cache),
+    "mamba2": (_mamba_spec, _mamba_apply, _mamba_cache),
+    "mlstm": (_mlstm_spec, _mlstm_apply, _mlstm_cache),
+    "slstm": (_slstm_spec, _slstm_apply, _slstm_cache),
+}
+
+
+# ---------------------------------------------------------------------------
+# Execution plan: segment runs + shared-block applications
+# ---------------------------------------------------------------------------
+def execution_plan(cfg) -> List[Tuple[str, Any]]:
+    """Returns [("seg", seg_idx, block_type, count) | ("shared", app_idx)]."""
+    events = []
+    for i, blk in enumerate(cfg.block_pattern):
+        events.append(("blk", blk))
+        if cfg.shared_block is not None and (i + 1) % cfg.shared_period == 0:
+            events.append(("shared", None))
+    plan, seg_idx, app_idx = [], 0, 0
+    i = 0
+    while i < len(events):
+        kind, blk = events[i]
+        if kind == "shared":
+            plan.append(("shared", app_idx))
+            app_idx += 1
+            i += 1
+            continue
+        j = i
+        while j < len(events) and events[j] == ("blk", blk):
+            j += 1
+        plan.append(("seg", (seg_idx, blk, j - i)))
+        seg_idx += 1
+        i = j
+    return plan
+
+
+def num_shared_apps(cfg) -> int:
+    if cfg.shared_block is None:
+        return 0
+    return sum(1 for i in range(cfg.num_layers) if (i + 1) % cfg.shared_period == 0)
+
+
+# ---------------------------------------------------------------------------
+# Model spec / init / apply
+# ---------------------------------------------------------------------------
+def model_spec(cfg) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {"embed": cm.embed_spec(cfg.vocab_size, cfg.d_model),
+                            "final_norm": cm.rmsnorm_spec(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = {"table": P((cfg.vocab_size, cfg.d_model),
+                                      ("vocab", "embed"), scale=0.02)}
+    for item, payload in execution_plan(cfg):
+        if item == "seg":
+            seg_idx, blk, count = payload
+            sfn = BLOCKS[blk][0]
+            one = sfn(cfg)
+            spec[f"seg{seg_idx}"] = cm.stack_specs(one, count) if count > 1 else one
+    if cfg.shared_block is not None:
+        spec["shared"] = BLOCKS[cfg.shared_block][0](cfg)
+    return spec
+
+
+def init(cfg, key, dtype=jnp.float32):
+    return cm.init_params(model_spec(cfg), key, dtype)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    cache: Dict[str, Any] = {}
+    for item, payload in execution_plan(cfg):
+        if item == "seg":
+            seg_idx, blk, count = payload
+            cfn = BLOCKS[blk][2]
+            one = cfn(cfg, batch, max_len, dtype)
+            if count > 1:
+                cache[f"seg{seg_idx}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+            else:
+                cache[f"seg{seg_idx}"] = one
+    n_apps = num_shared_apps(cfg)
+    if n_apps:
+        one = BLOCKS[cfg.shared_block][2](cfg, batch, max_len, dtype)
+        cache["shared"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), one)
+    return cache
+
+
+def _remat_wrap(apply_fn, cfg):
+    if cfg.remat == "none":
+        return apply_fn
+    if cfg.remat == "full":
+        return jax.checkpoint(apply_fn, static_argnums=(2,))
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            apply_fn, static_argnums=(2,),
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat)
+
+
+def _apply_segment(params_seg, x, cfg, blk, count, cache_seg, positions):
+    apply_fn = _remat_wrap(BLOCKS[blk][1], cfg)
+    if count == 1:
+        x, aux, nc = apply_fn(params_seg, x, cfg, cache_seg, positions)
+        return x, aux, nc
+
+    if cache_seg is None:
+        def body(carry, p):
+            xc, auxc = carry
+            xo, aux, _ = apply_fn(p, xc, cfg, None, positions)
+            return (xo, auxc + aux), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params_seg)
+        return x, aux, None
+
+    def body(carry, pc):
+        xc, auxc = carry
+        p, c = pc
+        xo, aux, nc = apply_fn(p, xc, cfg, c, positions)
+        return (xo, auxc + aux), nc
+
+    (x, aux), ncache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    (params_seg, cache_seg))
+    return x, aux, ncache
+
+
+def apply(params, batch: Dict[str, jax.Array], cfg, cache=None):
+    """batch: {"tokens": (B,S)} or {"embeds": (B,S,d)}.
+
+    Returns (logits, aux_loss, new_cache). With cache, positions start at
+    cache idx (uniform across layers by construction).
+    """
+    if cfg.input_mode == "tokens":
+        x = cm.embed(params["embed"], batch["tokens"])
+    else:
+        x = batch["embeds"]
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = x.astype(dtype)
+    B, S = x.shape[:2]
+
+    # positions are derived inside attention blocks from their cache idx
+    positions = None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+
+    for item, payload in execution_plan(cfg):
+        if item == "seg":
+            seg_idx, blk, count = payload
+            key = f"seg{seg_idx}"
+            cseg = cache[key] if cache is not None else None
+            x, aux, nc = _apply_segment(params[key], x, cfg, blk, count, cseg,
+                                        positions)
+            aux_total = aux_total + aux
+            if cache is not None:
+                new_cache[key] = nc
+        else:  # shared application
+            app_idx = payload
+            apply_fn = BLOCKS[cfg.shared_block][1]
+            if cache is not None:
+                c_app = jax.tree.map(lambda a: a[app_idx], cache["shared"])
+                x, aux, nc = apply_fn(params["shared"], x, cfg, c_app, positions)
+                new_cache.setdefault("shared", jax.tree.map(jnp.copy, cache["shared"]))
+                new_cache["shared"] = jax.tree.map(
+                    lambda full, upd: full.at[app_idx].set(upd),
+                    new_cache["shared"], nc)
+            else:
+                x, aux, _ = apply_fn(params["shared"], x, cfg, None, positions)
+            aux_total = aux_total + aux
+
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = cm.unembed(head, x.astype(jnp.float32))
+    return logits, aux_total, new_cache
+
+
+def loss_fn(params, batch, cfg):
+    """Next-token cross entropy (labels = batch['labels']); adds MoE aux."""
+    logits, aux, _ = apply(params, batch, cfg, cache=None)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux
+    return total, {"loss": loss, "aux": aux, "ppl_proxy": loss}

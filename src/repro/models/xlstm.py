@@ -1,0 +1,327 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, recurrent lax.scan) — Beck et al. 2024 (arXiv:2405.04517).
+
+This is the richest integration point for the paper's technique: every
+forget/output gate sigmoid and every input-gate companion routes through the
+CORDIC activation registry ("gating mechanisms in recurrent neural
+networks" is the paper's own motivating use case).
+
+mLSTM uses exp input gates with log-domain max-stabilization; the chunkwise
+form mirrors models/ssm.py: quadratic within a chunk, lax.scan across
+chunks carrying (C, n, m) per head.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.activations import get_activation
+from repro.models import common as cm
+from repro.models.common import P
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mdims(cfg):
+    x = cfg.xlstm
+    d_inner = int(cfg.d_model * x.proj_factor)
+    H = cfg.num_heads
+    dk = d_inner // H
+    return d_inner, H, dk
+
+
+def mlstm_spec(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_inner, H, dk = _mdims(cfg)
+    x = cfg.xlstm
+    return {
+        "up_proj": P((d, 2 * d_inner), ("embed", "mlp")),
+        "conv_w": P((x.d_conv, d_inner), (None, "mlp"), scale=0.5),
+        "conv_b": P((d_inner,), ("mlp",), init="zeros"),
+        "wq": P((d_inner, d_inner), ("mlp", None)),
+        "wk": P((d_inner, d_inner), ("mlp", None)),
+        "wv": P((d_inner, d_inner), ("mlp", None)),
+        "w_if": P((d_inner, 2 * H), ("mlp", None), scale=0.02),
+        "b_if": P((2 * H,), (None,), init="zeros"),
+        "norm": cm.rmsnorm_spec(d_inner),
+        "down_proj": P((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_init_cache(cfg, batch: int, dtype=jnp.float32):
+    d_inner, H, dk = _mdims(cfg)
+    x = cfg.xlstm
+    return {
+        "C": jnp.zeros((batch, H, dk, dk), dtype),
+        "n": jnp.zeros((batch, H, dk), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+        "conv": jnp.zeros((batch, x.d_conv - 1, d_inner), dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int, state=None):
+    """Chunkwise stabilized mLSTM.
+
+    q/k/v: (B,S,H,D); li: input gate preact (B,S,H); lf: log forget gate.
+    Returns y (B,S,H,D) and final (C,n,m).
+    """
+    B, S, H, D = q.shape
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:
+        # inert padding: k/v/q = 0, input gate li = -inf (no write),
+        # log forget lf = 0 (state preserved through the pad tail)
+        pad = L - S % L
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = map(zp, (q, k, v))
+        lf = zp(lf)
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        S = S + pad
+    nc = S // L
+    scale = 1.0 / np.sqrt(D)
+
+    cr = lambda t: t.reshape((B, nc, L) + t.shape[2:])
+    qc, kc, vc = cr(q), cr(k), cr(v)
+    lic, lfc = cr(li), cr(lf)
+    Fc = jnp.cumsum(lfc, axis=2)                       # (B,nc,L,H)
+    totF = Fc[:, :, -1]                                # (B,nc,H)
+    idx = jnp.arange(L)
+    causal = idx[:, None] >= idx[None, :]
+
+    if state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, lib, Fb, totb = inp
+        # D_ij = F_i - F_j + li_j  (i >= j)
+        Dm = jnp.where(causal[None, :, :, None],
+                       Fb[:, :, None, :] - Fb[:, None, :, :] + lib[:, None, :, :],
+                       -jnp.inf)                        # (B,L,L,H)
+        m_intra = jnp.max(Dm, axis=2)                   # (B,L,H)
+        m_inter = Fb + m[:, None, :]                    # (B,L,H)
+        mi = jnp.maximum(m_intra, m_inter)
+        mi = jnp.maximum(mi, -1e30)
+        Sij = jnp.exp(Dm - mi[:, :, None, :])           # (B,L,L,H)
+        att = jnp.einsum("blhd,bmhd->blmh", qb, kb) * scale
+        num_intra = jnp.einsum("blmh,bmhd->blhd", Sij * att, vb)
+        den_intra = jnp.einsum("blmh,bmhd,blhd->blh", Sij, kb, qb) * scale
+        w_in = jnp.exp(m_inter - mi)                    # (B,L,H)
+        num_inter = jnp.einsum("blh,blhd,bhde->blhe", w_in, qb, C) * scale
+        den_inter = jnp.einsum("blh,blhd,bhd->blh", w_in, qb, n) * scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-mi))[..., None]
+        # chunk-end state update
+        m_out = jnp.maximum(totb + m, jnp.max(totb[:, None, :] - Fb + lib, axis=1))
+        wC = jnp.exp(totb + m - m_out)                  # (B,H)
+        wK = jnp.exp(totb[:, None, :] - Fb + lib - m_out[:, None, :])  # (B,L,H)
+        C_new = wC[:, :, None, None] * C + jnp.einsum("blh,blhd,blhe->bhde",
+                                                      wK, kb, vb)
+        n_new = wC[:, :, None] * n + jnp.einsum("blh,blhd->bhd", wK, kb)
+        return (C_new, n_new, m_out), y
+
+    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    (CN, nN, mN), yc = jax.lax.scan(
+        step, (C0, n0, m0), (swap(qc), swap(kc), swap(vc), swap(lic),
+                             swap(Fc), swap(totF)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, D)
+    return y[:, :S_orig], (CN, nN, mN)
+
+
+def _mlstm_decode_step(q, k, v, li, lf, state):
+    """Single-token stabilized update. q/k/v: (B,H,D); li/lf: (B,H)."""
+    C, n, m = state
+    D = q.shape[-1]
+    scale = 1.0 / np.sqrt(D)
+    m_new = jnp.maximum(lf + m, li)
+    wC = jnp.exp(lf + m - m_new)
+    wK = jnp.exp(li - m_new)
+    C_new = wC[..., None, None] * C + wK[..., None, None] * (k[..., :, None]
+                                                             * v[..., None, :])
+    n_new = wC[..., None] * n + wK[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new) * scale
+    den = jnp.einsum("bhd,bhd->bh", q, n_new) * scale
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return y, (C_new, n_new, m_new)
+
+
+def mlstm_apply(params, x, cfg, *, cache: Optional[dict] = None):
+    B, S, d = x.shape
+    d_inner, H, dk = _mdims(cfg)
+    silu = get_activation("silu", cfg.act_impl, range_mode="reduce")
+    sig = get_activation("sigmoid", cfg.act_impl, range_mode="reduce")
+
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(x.dtype))
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+
+    # causal conv + silu on the q/k path
+    w = params["conv_w"].astype(x.dtype)
+    Wd = w.shape[0]
+    conv_state = cache["conv"] if cache is not None else None
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(x.dtype), xm], axis=1)
+        new_conv = ctx[:, -(Wd - 1):, :]
+    else:
+        ctx = jnp.pad(xm, ((0, 0), (Wd - 1, 0), (0, 0)))
+        new_conv = None
+    xc = sum(ctx[:, i: i + S, :] * w[i] for i in range(Wd)) \
+        + params["conv_b"].astype(x.dtype)
+    xc = silu(xc)
+
+    q = jnp.einsum("bse,ef->bsf", xc, params["wq"].astype(x.dtype)).reshape(B, S, H, dk)
+    k = jnp.einsum("bse,ef->bsf", xc, params["wk"].astype(x.dtype)).reshape(B, S, H, dk)
+    v = jnp.einsum("bse,ef->bsf", xm, params["wv"].astype(x.dtype)).reshape(B, S, H, dk)
+    gif = jnp.einsum("bse,eg->bsg", xm, params["w_if"].astype(x.dtype)) \
+        + params["b_if"].astype(x.dtype)
+    li = gif[..., :H].astype(jnp.float32)                     # input gate preact
+    lf = jax.nn.log_sigmoid(gif[..., H:].astype(jnp.float32))  # log forget gate
+
+    if cache is not None and S == 1:
+        state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+        y, (C2, n2, m2) = _mlstm_decode_step(
+            q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+            v[:, 0].astype(jnp.float32), li[:, 0], lf[:, 0], state)
+        y = y[:, None]
+        new_cache = {"C": C2.astype(cache["C"].dtype), "n": n2.astype(cache["n"].dtype),
+                     "m": m2.astype(cache["m"].dtype), "conv": new_conv}
+    else:
+        state = None
+        if cache is not None:
+            state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                     cache["m"].astype(jnp.float32))
+        y, (C2, n2, m2) = _mlstm_chunked(
+            q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            li, lf, cfg.xlstm.chunk, state)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": C2.astype(cache["C"].dtype),
+                         "n": n2.astype(cache["n"].dtype),
+                         "m": m2.astype(cache["m"].dtype), "conv": new_conv}
+
+    y = y.astype(x.dtype).reshape(B, S, d_inner)
+    y = cm.rmsnorm(params["norm"], y) * silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(x.dtype)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_spec(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    return {
+        "w": P((d, 4 * d), ("embed", "mlp")),          # i,f,z,o preacts
+        "b": P((4 * d,), ("mlp",), init="zeros"),
+        "r": P((4, H, dh, dh), (None, None, None, None), scale=0.02),
+        "norm": cm.rmsnorm_spec(d),
+        "ffn": {
+            "w_gate": P((d, int(d * cfg.xlstm.ffn_factor)), ("embed", "mlp")),
+            "w_up": P((d, int(d * cfg.xlstm.ffn_factor)), ("embed", "mlp")),
+            "w_down": P((int(d * cfg.xlstm.ffn_factor), d), ("mlp", "embed")),
+        },
+    }
+
+
+def slstm_init_cache(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), dtype),
+        "n": jnp.zeros((batch, d), dtype),
+        "m": jnp.full((batch, d), -1e30, dtype),
+        "h": jnp.zeros((batch, d), dtype),
+    }
+
+
+def _slstm_cell(params, wx_t, state, cfg, acts):
+    """One sLSTM step. wx_t: (B,4d) precomputed input preacts."""
+    sig, tanh = acts
+    H = cfg.num_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, m, h = state
+    hh = h.reshape(-1, H, dh)
+    r = params["r"].astype(h.dtype)                    # (4,H,dh,dh)
+    rh = jnp.einsum("bhe,ghef->bghf", hh, r).reshape(-1, 4 * d)
+    pre = wx_t + rh
+    pi, pf, pz, po = jnp.split(pre, 4, axis=-1)
+    pi = pi.astype(jnp.float32)
+    pf = pf.astype(jnp.float32)
+    m_new = jnp.maximum(pf + m, pi)                    # exp forget gate (log dom)
+    i = jnp.exp(pi - m_new)
+    f = jnp.exp(pf + m - m_new)
+    c_new = f * c + i * tanh(pz.astype(jnp.float32))
+    n_new = f * n + i
+    h_new = sig(po.astype(jnp.float32)) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_apply(params, x, cfg, *, cache: Optional[dict] = None):
+    """x: (B,S,d). Recurrent scan over time (the sLSTM has no parallel form);
+    input preactivations are hoisted out of the scan."""
+    B, S, d = x.shape
+    sig = get_activation("sigmoid", cfg.act_impl, range_mode="reduce")
+    tanh = get_activation("tanh", cfg.act_impl, range_mode="reduce")
+    acts = (sig, tanh)
+
+    wx = jnp.einsum("bsd,de->bse", x, params["w"].astype(x.dtype)) \
+        + params["b"].astype(x.dtype)                  # (B,S,4d)
+    if cfg.slstm_state == "replicated":
+        # Pin the scan inputs (and hence the carried state) to batch-only
+        # sharding: the recurrence then runs replicated across the model
+        # axis — tiny redundant compute instead of one cross-chip permute
+        # per TIMESTEP (4096 of them at train_4k; see EXPERIMENTS §Perf).
+        from jax.sharding import PartitionSpec as PS
+
+        wx = cm.maybe_shard(wx, PS(("pod", "data"), None, None),
+                            PS("data", None, None))
+
+    if cache is not None:
+        st = (cache["c"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+              cache["m"].astype(jnp.float32), cache["h"].astype(jnp.float32))
+    else:
+        z = jnp.zeros((B, d), jnp.float32)
+        st = (z, z, jnp.full((B, d), -1e30, jnp.float32), z)
+    if cfg.slstm_state == "replicated":
+        from jax.sharding import PartitionSpec as PS
+
+        st = tuple(cm.maybe_shard(s, PS(("pod", "data"), None),
+                                  PS("data", None)) for s in st)
+
+    def step(s, wx_t):
+        s2 = _slstm_cell(params, wx_t, s, cfg, acts)
+        if cfg.slstm_state == "replicated":
+            from jax.sharding import PartitionSpec as PS
+
+            s2 = tuple(cm.maybe_shard(t, PS(("pod", "data"), None),
+                                      PS("data", None)) for t in s2)
+        return s2, s2[3]
+
+    st2, hs = jax.lax.scan(step, st, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)         # (B,S,d)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": st2[0].astype(cache["c"].dtype),
+                     "n": st2[1].astype(cache["n"].dtype),
+                     "m": st2[2].astype(cache["m"].dtype),
+                     "h": st2[3].astype(cache["h"].dtype)}
+
+    # post-norm + gated FFN (block structure)
+    y = cm.rmsnorm(params["norm"], y)
+    silu = get_activation("silu", cfg.act_impl, range_mode="reduce")
+    f = params["ffn"]
+    g = jnp.einsum("bsd,df->bsf", y, f["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", y, f["w_up"].astype(x.dtype))
+    y = jnp.einsum("bsf,fd->bsd", silu(g) * u, f["w_down"].astype(x.dtype))
+    return y, new_cache

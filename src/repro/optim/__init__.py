@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    init,
+)
+from repro.optim import schedule  # noqa: F401

@@ -1,0 +1,118 @@
+"""Batched serving engine: prefill + decode steps and a slot-based
+continuous-batching loop.
+
+`make_prefill_step`/`make_decode_step` are the functions the dry-run lowers
+for the decode shapes (decode_32k / long_500k): one new token against a KV /
+recurrent-state cache. The engine runs them on whatever mesh it is given;
+requests are packed into fixed batch slots and refilled as sequences finish
+(continuous batching at step granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+
+
+def make_prefill_step(cfg):
+    def prefill(params, cache, batch):
+        logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
+    def decode(params, cache, tokens):
+        """tokens: (B,1) int32 (or (B,1,d) embeds). Returns next token ids."""
+        batch = ({"tokens": tokens} if cfg.input_mode == "tokens"
+                 else {"embeds": tokens})
+        logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
+        last = logits[:, -1]
+        if greedy:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                jax.random.PRNGKey(0), last / temperature).astype(jnp.int32)
+        return nxt, cache
+    return decode
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    max_new_tokens: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching on top of prefill/decode steps.
+
+    Static batch of `slots`; each slot holds one request; finished slots are
+    refilled from the queue between decode steps (per-slot cache reset via
+    masking — slot caches are re-prefilled on admission).
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
+                 eos_token: Optional[int] = None):
+        assert cfg.input_mode == "tokens", "engine serves token LMs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._queue: List[Request] = []
+        self._active: List[Optional[Request]] = [None] * slots
+        self._caches = [tf.init_cache(cfg, 1, max_len, jnp.float32)
+                        for _ in range(slots)]
+        self._next_tok = np.zeros((slots, 1), np.int32)
+
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.slots):
+            if self._active[s] is None and self._queue:
+                req = self._queue.pop(0)
+                self._active[s] = req
+                cache = tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
+                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+                logits, cache = self._prefill(self.params, cache,
+                                              {"tokens": toks})
+                self._caches[s] = cache
+                self._next_tok[s, 0] = int(jnp.argmax(logits[0]))
+                req.out.append(int(self._next_tok[s, 0]))
+
+    def step(self) -> int:
+        """One decode step across all active slots; returns #active."""
+        self._admit()
+        active = [s for s in range(self.slots) if self._active[s] is not None]
+        if not active:
+            return 0
+        for s in active:
+            req = self._active[s]
+            nxt, cache = self._decode(self.params, self._caches[s],
+                                      jnp.asarray(self._next_tok[s:s + 1]))
+            self._caches[s] = cache
+            tok = int(nxt[0])
+            req.out.append(tok)
+            self._next_tok[s, 0] = tok
+            if (self.eos is not None and tok == self.eos) or \
+                    len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self._active[s] = None
+        return len(active)
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        while self._queue or any(a is not None for a in self._active):
+            self.step()
+        return done

@@ -1,0 +1,101 @@
+"""The pjit train step: loss -> grads -> (optional compression) -> AdamW.
+
+`make_train_step(cfg, opt_cfg, ...)` builds a pure function
+    (state, batch) -> (state, metrics)
+suitable for jax.jit with NamedShardings (see launch/dryrun.py and
+train/loop.py). Microbatch gradient accumulation is a lax.scan over batch
+slices — on a real mesh this *overlaps* the per-microbatch backward
+collectives with the next microbatch's compute (the standard accumulation
+overlap trick); donated state keeps HBM flat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    err: Any            # error-feedback buffers (zeros-like or None)
+
+
+def init_state(cfg, key, opt_cfg: adamw.AdamWConfig, *, compress: bool = False,
+               dtype=jnp.float32) -> TrainState:
+    params = tf.init(cfg, key, dtype)
+    return TrainState(params=params, opt=adamw.init(params),
+                      err=comp.init_error_state(params) if compress else None)
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, accum: int = 1,
+                    compress: bool = False, warmup_steps: int = 100,
+                    total_steps: int = 10000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return tf.loss_fn(params, batch, cfg)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        B = batch["labels"].shape[0]
+        assert B % accum == 0, (B, accum)
+        mb = B // accum
+        sliced = jax.tree.map(
+            lambda a: a.reshape((accum, mb) + a.shape[1:]), batch)
+        # keep the microbatch dim sharded over the data axes — without the
+        # constraint GSPMD can replicate the reshaped batch (measured 4x
+        # memory regression in EXPERIMENTS.md section Perf iteration 3)
+        from jax.sharding import PartitionSpec as PS
+        from repro.models.common import maybe_shard
+
+        sliced = jax.tree.map(
+            lambda a: maybe_shard(a, PS(None, ("pod", "data")),
+                                  PS(None, "data")), sliced)
+
+        def body(carry, micro):
+            g_acc, l_acc = carry
+            (loss, _), g = grad_fn(params, micro)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), _ = jax.lax.scan(body, (zeros, 0.0), sliced)
+        grads = jax.tree.map(lambda g: g / accum, g_sum)
+        loss = l_sum / accum
+        return loss, {"loss": loss, "aux": jnp.zeros(())}, grads
+
+    def train_step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        err = state.err
+        if compress:
+            grads, err = comp.compress_grads(grads, err)
+        lr_scale = warmup_cosine(state.opt.step, warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+        new_params, new_opt, opt_m = adamw.apply_updates(
+            state.params, state.opt, grads, opt_cfg, lr_scale)
+        out = {"loss": loss, "grad_norm": opt_m["grad_norm"],
+               "lr_scale": lr_scale, **{k: v for k, v in metrics.items()
+                                        if k != "loss"}}
+        return TrainState(new_params, new_opt, err), out
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, metrics = tf.loss_fn(params, batch, cfg)
+        return metrics
+    return eval_step

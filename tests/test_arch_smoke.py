@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+family, run one forward + one train(grad) step + one decode step on CPU;
+assert output shapes and finiteness. The FULL configs are exercised only by
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.models import frontends
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=0):
+    rng = np.random.default_rng(key)
+    if cfg.input_mode == "tokens":
+        toks = rng.integers(0, cfg.vocab_size, (B, S))
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(np.roll(toks, -1, 1), jnp.int32)}
+    emb = frontends.audio_frame_embeddings(B, S, cfg.d_model)
+    labels = rng.integers(0, cfg.vocab_size, (B, S))
+    return {"embeds": emb, "labels": jnp.asarray(labels, jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_shapes(arch):
+    cfg = configs.get_smoke(arch)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux, _ = tf.apply(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg = configs.get_smoke(arch)
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    batch = _batch(cfg, key=1)
+    (loss, metrics), grads = jax.value_and_grad(tf.loss_fn, has_aux=True)(
+        params, batch, cfg)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    # at least 99% of grad leaves should be non-zero somewhere (wired up)
+    nonzero = sum(int(np.abs(np.asarray(g)).sum() > 0) for g in flat)
+    assert nonzero >= int(0.8 * len(flat)), f"{nonzero}/{len(flat)} live grads"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    params = tf.init(cfg, jax.random.PRNGKey(2))
+    cache = tf.init_cache(cfg, batch=B, max_len=64, dtype=jnp.float32)
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    else:
+        batch = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+    logits, _, new_cache = tf.apply(params, batch, cfg, cache=cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert new_cache is not None
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "deepseek-v2-lite-16b",
+                                  "zamba2-1.2b", "xlstm-1.3b"])
+def test_prefill_then_decode_consistency(arch):
+    """Greedy decode after prefill == teacher-forced forward on same tokens.
+
+    MoE capacity dropping depends on the token count, so for this exactness
+    check the capacity factor is raised until nothing drops (the drop
+    behaviour itself is exercised in test_models.py)."""
+    import dataclasses
+
+    cfg = configs.get_smoke(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    T = 12
+    if cfg.input_mode == "tokens":
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+        full_logits, _, _ = tf.apply(params, {"tokens": toks}, cfg)
+        cache = tf.init_cache(cfg, batch=B, max_len=32, dtype=jnp.float32)
+        pre_logits, _, cache = tf.apply(params, {"tokens": toks[:, :T - 1]},
+                                        cfg, cache=cache)
+        dec_logits, _, _ = tf.apply(params, {"tokens": toks[:, T - 1:T]},
+                                    cfg, cache=cache)
+        np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                                   np.asarray(full_logits[:, -1]),
+                                   atol=2e-2, rtol=2e-2)
+
+
+def test_param_counts_sane():
+    """Full-config param counts land near the advertised sizes."""
+    expect = {
+        "qwen2.5-32b": (31e9, 36e9),
+        "command-r-plus-104b": (98e9, 118e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "yi-9b": (8e9, 10e9),
+        # assignment fixes 48L x 2048; with the mLSTM proj_factor 2.0 that is
+        # ~3.7B params (the "1.3b" name matches the original 24-block config;
+        # DESIGN.md deviation 8)
+        "xlstm-1.3b": (1.0e9, 3.8e9),
+        # decoder backbone only (T5 text encoder + EnCodec are stubbed per
+        # the assignment spec); published 3.3B includes the frontends
+        "musicgen-large": (2.2e9, 3.6e9),
+        "zamba2-1.2b": (1.0e9, 1.6e9),
+        "deepseek-v2-lite-16b": (14e9, 18e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+        "internvl2-1b": (0.5e9, 1.2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = configs.get_config("phi3.5-moe-42b-a6.6b")
+    pc = cfg.param_counts()
+    # a6.6b: active ~6.6B (plus embeddings)
+    assert 5e9 <= pc["active"] <= 8e9
+    assert pc["active"] < pc["total"]

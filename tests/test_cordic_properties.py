@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) for the CORDIC system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cordic as C
+from repro.core import fixed_point as fp
+from repro.core import sigmoid as S
+
+SCHED = C.PAPER_SCHEDULE
+CFG = C.PAPER_FIXED
+
+f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)
+
+unit_inputs = st.floats(min_value=-1.0, max_value=1.0, allow_nan=False,
+                        allow_infinity=False, width=32)
+half_inputs = st.floats(min_value=-0.5, max_value=0.5, allow_nan=False,
+                        allow_infinity=False, width=32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(half_inputs)
+def test_hrc_computes_sinh_cosh(z):
+    """MR-HRC float: x_N ~ cosh(z), y_N ~ sinh(z) (paper Fig. 2, stage 1)."""
+    c, s, zr = C.mr_hrc_f(f32(z), SCHED)
+    assert abs(float(c) - math.cosh(z)) < 5e-4
+    assert abs(float(s) - math.sinh(z)) < 5e-4
+
+
+@settings(max_examples=200, deadline=None)
+@given(half_inputs)
+def test_residual_contracts_through_pipeline(z):
+    """|residual| after R2+R4 is below the radix-4 terminal step bound."""
+    _, _, zr = C.mr_hrc_f(f32(z), SCHED)
+    # terminal radix-4 step: atanh(2*4^-7) plus SRT half-interval slack
+    bound = math.atanh(2 * 4.0 ** -7) + 0.5 * 4.0 ** -7 + 1e-6
+    assert abs(float(zr)) < 4 * bound
+
+
+@settings(max_examples=200, deadline=None)
+@given(half_inputs)
+def test_r2_residual_within_r4_range(z):
+    """Stage handoff: R2 residual always inside R4 admissible range."""
+    res = float(C.r2_residual_f(f32(z), SCHED))
+    assert res <= SCHED.r4_range + 1e-7
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(min_value=-0.984375, max_value=0.984375, allow_nan=False, width=32),
+       st.floats(min_value=0.625, max_value=1.25, allow_nan=False, width=32))
+def test_lvc_division(ratio, x0):
+    """R2-LVC computes y/x for any |y/x| <= 2 domain point (float).
+
+    Hard bound: after the last iteration |y_N| <= x*2^-14, so the quotient
+    error is <= 2^-14 ~ 6.1e-5 plus f32 noise."""
+    y0 = ratio * x0
+    z = C.r2_lvc_f(f32(x0), f32(y0), SCHED.lvc_js)
+    assert abs(float(z) - ratio) < 2.0 ** -14 + 1e-5
+
+
+@settings(max_examples=200, deadline=None)
+@given(unit_inputs)
+def test_sigmoid_fixed_error_bound(x):
+    """Pointwise |error| of the Q2.14 pipeline <= 1e-3 everywhere in-domain."""
+    y = float(S.sigmoid_cordic_fixed(f32(x)))
+    assert abs(y - 1.0 / (1.0 + math.exp(-x))) < 1e-3
+
+
+@settings(max_examples=100, deadline=None)
+@given(unit_inputs)
+def test_sigmoid_symmetry(x):
+    """sigma(-x) = 1 - sigma(x) within 2 output ULPs (odd-symmetric datapath)."""
+    a = float(S.sigmoid_cordic_fixed(f32(x)))
+    b = float(S.sigmoid_cordic_fixed(f32(-x)))
+    # shift truncation (floor) is sign-asymmetric, so the residual asymmetry
+    # is a few ULPs rather than zero — measured worst case 8 ULP over the
+    # whole code grid (truncation bias accumulating across 26 stages).
+    assert abs((a + b) - 1.0) <= 8.5 * fp.Q2_14.resolution
+
+
+def test_sigmoid_monotone_on_grid():
+    """Quasi-monotonicity on the full representable input grid (2^15 codes).
+
+    Truncation noise produces isolated glitches of a few ULPs (measured
+    min step -3 ULP on 4/32768 codes); the coarse trend must be strictly
+    increasing and glitches bounded."""
+    xq = jnp.arange(-(1 << 14), (1 << 14) + 1, dtype=jnp.int32)
+    yq = np.asarray(C.sigmoid_mr_q(xq, SCHED, CFG))
+    dy = np.diff(yq)
+    assert dy.min() >= -4            # glitches bounded
+    assert (dy < 0).sum() <= 64      # and rare
+    coarse = yq[::256]
+    assert np.all(np.diff(coarse) > 0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(unit_inputs)
+def test_no_wraparound_in_domain(x):
+    """All datapath registers stay inside Q2.14 (-2, 2): wrap never fires.
+
+    Checked by running the same pipeline in a 24-bit format with identical
+    fraction bits: if 16-bit wrapped anywhere, outputs would diverge by >2.
+    """
+    xq = fp.quantize(f32(x), fp.Q2_14)
+    y16 = C.sigmoid_mr_q(xq, SCHED, C.FixedConfig(fmt=fp.Q2_14))
+    wide = C.FixedConfig(fmt=fp.QFormat(total_bits=24, frac_bits=14))
+    y24 = C.sigmoid_mr_q(xq, SCHED, wide)
+    assert int(y16) == int(y24)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(min_value=-8.0, max_value=8.0, allow_nan=False, width=32))
+def test_wide_range_error(x):
+    y = float(S.sigmoid_cordic_wide(f32(x)))
+    assert abs(y - 1.0 / (1.0 + math.exp(-x))) < 6e-3
+
+
+@settings(max_examples=50, deadline=None)
+@given(unit_inputs)
+def test_gradient_matches_analytic(x):
+    """custom_jvp: d/dx of the registry sigmoid == s(1-s) from the primal."""
+    from repro.core.activations import get_activation
+
+    act = get_activation("sigmoid", "cordic_fixed", range_mode="clamp")
+    g = float(jax.grad(lambda v: act(v))(f32(x)))
+    s = float(act(f32(x)))
+    assert abs(g - s * (1 - s)) < 1e-6
+
+
+def test_digit_selection_bounds():
+    """R4 SRT digit selection keeps the scaled residual in [-8/3, 8/3]-ish:
+    after selecting sigma on w = 4^j z, the post-step |w'| <= 2 (next scale)."""
+    rng = np.random.default_rng(0)
+    for j in SCHED.r4_js:
+        w = rng.uniform(-2.6, 2.6, size=4096).astype(np.float32)  # admissible w
+        z = jnp.asarray(w) * (4.0 ** -j)
+        s = C._r4_digit_f(z, j)
+        z_next = z - jnp.sign(s) * jnp.where(
+            jnp.abs(s) == 2, math.atanh(2 * 4.0 ** -j),
+            jnp.where(jnp.abs(s) == 1, math.atanh(4.0 ** -j), 0.0))
+        w_next = np.asarray(z_next) * (4.0 ** (j + 1))
+        assert np.abs(w_next).max() <= 2.7  # stays admissible for next iter

@@ -1,0 +1,102 @@
+"""Pallas kernel validation vs the pure-jnp oracle (ref.py).
+
+Sweeps shapes (incl. ragged tails), dtypes, and ops; the integer path must
+be bit-exact, float paths exact-to-f32 (same math, same order).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed_point as fp
+from repro.kernels import ops, ref
+
+SHAPES = [(8,), (100,), (128,), (257,), (8, 128), (16, 1000), (4, 3, 65),
+          (2, 5, 7, 33), (1,), (2048,), (3, 4096)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dtype, lo=-1.0, hi=1.0, seed=0):
+    rng = np.random.default_rng(seed + int(np.prod(shape)))
+    return jnp.asarray(rng.uniform(lo, hi, size=shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sigmoid_matches_oracle(shape, dtype):
+    x = _rand(shape, dtype)
+    got = ops.sigmoid(x)
+    want = ref.sigmoid_ref(x.astype(jnp.float32)).astype(dtype)
+    assert got.shape == shape and got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=(1e-6 if dtype == jnp.float32 else 4e-3))
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (100,), (16, 1000)])
+def test_sigmoid_bit_exact_f32(shape):
+    """f32 in-domain: kernel and oracle produce identical Q2.14 codes."""
+    x = _rand(shape, jnp.float32)
+    got = np.asarray(ops.sigmoid(x))
+    want = np.asarray(ref.sigmoid_ref(x))
+    code_g = np.round(got * fp.Q2_14.scale)
+    code_w = np.round(want * fp.Q2_14.scale)
+    np.testing.assert_array_equal(code_g, code_w)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int16, jnp.int32])
+@pytest.mark.parametrize("shape", [(128,), (8, 128), (300,)])
+def test_sigmoid_q_bit_exact(dtype, shape):
+    """Integer path is bit-exact vs the Q2.14 oracle."""
+    rng = np.random.default_rng(7)
+    xq = jnp.asarray(rng.integers(-(1 << 14), (1 << 14) + 1, size=shape), dtype)
+    got = np.asarray(ops.sigmoid_q(xq), np.int32)
+    want = np.asarray(ref.sigmoid_q_ref(xq.astype(jnp.int32)), np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("shape", [(64,), (8, 256)])
+def test_tanh_matches_oracle(shape):
+    x = _rand(shape, jnp.float32, -0.5, 0.5)
+    got = np.asarray(ops.tanh(x))
+    want = np.asarray(ref.tanh_ref(x))
+    # direct angle feed: bit-identical Q2.14 codes
+    np.testing.assert_array_equal(np.round(got * fp.Q2_14.scale),
+                                  np.round(want * fp.Q2_14.scale))
+    exact = np.tanh(np.asarray(x, np.float64))
+    assert np.abs(got - exact).max() < 1e-3
+
+
+@pytest.mark.parametrize("shape", [(512,), (8, 300)])
+def test_silu_and_wide(shape):
+    x = _rand(shape, jnp.float32, -6.0, 6.0, seed=3)
+    got_s = np.asarray(ops.sigmoid_wide(x))
+    exact_s = 1.0 / (1.0 + np.exp(-np.asarray(x, np.float64)))
+    assert np.abs(got_s - exact_s).max() < 6e-3
+    got = np.asarray(ops.silu(x))
+    want = np.asarray(ref.silu_ref(x))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_silu_mul_fused_matches_unfused():
+    g = _rand((16, 512), jnp.float32, -4, 4, seed=11)
+    u = _rand((16, 512), jnp.float32, -2, 2, seed=12)
+    got = np.asarray(ops.silu_mul(g, u))
+    want = np.asarray(u) * np.asarray(ops.silu(g))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_gradients_flow():
+    x = _rand((64,), jnp.float32, -3, 3, seed=5)
+    for f in (ops.sigmoid_wide, ops.silu, ops.tanh):
+        g = jax.grad(lambda v: jnp.sum(f(v)))(x)
+        assert np.isfinite(np.asarray(g)).all()
+    gg = jax.grad(lambda v: jnp.sum(ops.silu_mul(v, x)))(x)
+    assert np.isfinite(np.asarray(gg)).all()
+
+
+def test_jit_and_vmap_compose():
+    x = _rand((4, 64), jnp.float32)
+    a = jax.jit(ops.sigmoid)(x)
+    b = jax.vmap(ops.sigmoid)(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)

@@ -1,0 +1,267 @@
+"""Model-component unit tests: attention vs naive reference, chunked
+causal equivalence, MoE dispatch semantics, Mamba2/mLSTM chunk invariance,
+RoPE properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moem
+from repro.models import ssm as ssmm
+from repro.models import xlstm as xlm
+from repro.models import transformer as tf
+
+
+def _naive_causal(q, k, v):
+    """Reference O(S^2) attention. q: (B,S,KH,G,D), k/v: (B,S,KH,D)."""
+    B, S, KH, G, D = q.shape
+    out = np.zeros_like(np.asarray(q, np.float32))
+    qn = np.asarray(q, np.float32)
+    kn = np.asarray(k, np.float32)
+    vn = np.asarray(v, np.float32)
+    for b in range(B):
+        for h in range(KH):
+            for g in range(G):
+                s = qn[b, :, h, g] @ kn[b, :, h].T / np.sqrt(D)
+                mask = np.tril(np.ones((S, S), bool))
+                s = np.where(mask, s, -1e30)
+                p = np.exp(s - s.max(-1, keepdims=True))
+                p /= p.sum(-1, keepdims=True)
+                out[b, :, h, g] = p @ vn[b, :, h]
+    return out
+
+
+def test_chunked_attention_matches_naive():
+    rng = np.random.default_rng(0)
+    B, S, KH, G, D = 2, 64, 2, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (B, S, KH, G, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KH, D)), jnp.float32)
+    got_full = attn.causal_attention(q, k, v, chunk=128)   # single block
+    got_chunk = attn.causal_attention(q, k, v, chunk=16)   # scanned chunks
+    want = _naive_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(got_full), want, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_chunk), want, atol=1e-4)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = cm.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on (m - n)
+    q = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 1, 1, 16)), jnp.float32)
+    def dot(m, n):
+        qm = cm.apply_rope(q, jnp.asarray([[m]]))
+        kn = cm.apply_rope(k, jnp.asarray([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert dot(3, 1) == pytest.approx(dot(7, 5), rel=1e-4)
+    assert dot(3, 1) == pytest.approx(dot(10, 8), rel=1e-4)
+
+
+def test_moe_capacity_drops_and_combines():
+    cfg = configs.get_smoke("phi3.5-moe-42b-a6.6b", act_impl="exact")
+    m = cfg.moe
+    params = cm.init_params(moem.moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (2, 8, cfg.d_model)),
+                    jnp.float32)
+    y, aux = moem.moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 0
+    # capacity semantics: with capacity_factor -> 0 almost all tokens drop
+    import dataclasses as dc
+
+    cfg0 = dc.replace(cfg, moe=dc.replace(m, capacity_factor=1e-6))
+    y0, _ = moem.moe_apply(params, x, cfg0)
+    assert float(jnp.abs(y0).mean()) < float(jnp.abs(y).mean())
+
+
+def test_moe_sigmoid_router():
+    import dataclasses as dc
+
+    cfg = configs.get_smoke("deepseek-v2-lite-16b", act_impl="cordic_fixed")
+    cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, router_score="sigmoid"))
+    params = cm.init_params(moem.moe_spec(cfg), jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 4, cfg.d_model)),
+                    jnp.float32)
+    y, aux = moem.moe_apply(params, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_mamba2_chunk_invariance():
+    """SSD output must not depend on the chunk size."""
+    import dataclasses as dc
+
+    cfg = configs.get_smoke("zamba2-1.2b", act_impl="exact")
+    params = cm.init_params(ssmm.mamba2_spec(cfg), jax.random.PRNGKey(2))
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 0.5, (2, 32, cfg.d_model)),
+                    jnp.float32)
+    y1, _ = ssmm.mamba2_apply(params, x, dc.replace(
+        cfg, ssm=dc.replace(cfg.ssm, chunk=8)))
+    y2, _ = ssmm.mamba2_apply(params, x, dc.replace(
+        cfg, ssm=dc.replace(cfg.ssm, chunk=32)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+
+
+def test_mamba2_decode_matches_prefill():
+    cfg = configs.get_smoke("zamba2-1.2b", act_impl="exact")
+    params = cm.init_params(ssmm.mamba2_spec(cfg), jax.random.PRNGKey(3))
+    x = jnp.asarray(np.random.default_rng(3).normal(0, 0.5, (1, 9, cfg.d_model)),
+                    jnp.float32)
+    y_full, _ = ssmm.mamba2_apply(params, x, cfg)
+    cache = ssmm.mamba2_init_cache(cfg, 1)
+    y_pre, cache = ssmm.mamba2_apply(params, x[:, :8], cfg, cache=cache)
+    y_dec, _ = ssmm.mamba2_apply(params, x[:, 8:9], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_full[:, 8]),
+                               atol=2e-4)
+
+
+def test_mlstm_chunk_invariance_and_decode():
+    cfg = configs.get_smoke("xlstm-1.3b", act_impl="exact")
+    params = cm.init_params(xlm.mlstm_spec(cfg), jax.random.PRNGKey(4))
+    x = jnp.asarray(np.random.default_rng(4).normal(0, 0.5, (2, 32, cfg.d_model)),
+                    jnp.float32)
+    import dataclasses as dc
+
+    y1, _ = xlm.mlstm_apply(params, x, dc.replace(
+        cfg, xlstm=dc.replace(cfg.xlstm, chunk=8)))
+    y2, _ = xlm.mlstm_apply(params, x, dc.replace(
+        cfg, xlstm=dc.replace(cfg.xlstm, chunk=32)))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+
+    cache = xlm.mlstm_init_cache(cfg, 2)
+    y_pre, cache = xlm.mlstm_apply(params, x[:, :31], cfg, cache=cache)
+    y_dec, _ = xlm.mlstm_apply(params, x[:, 31:32], cfg, cache=cache)
+    y_full, _ = xlm.mlstm_apply(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_full[:, 31]),
+                               atol=2e-3)
+
+
+def test_slstm_cache_continuation():
+    cfg = configs.get_smoke("xlstm-1.3b", act_impl="exact")
+    params = cm.init_params(xlm.slstm_spec(cfg), jax.random.PRNGKey(5))
+    x = jnp.asarray(np.random.default_rng(5).normal(0, 0.5, (1, 12, cfg.d_model)),
+                    jnp.float32)
+    y_full, _ = xlm.slstm_apply(params, x, cfg)
+    cache = xlm.slstm_init_cache(cfg, 1)
+    _, cache = xlm.slstm_apply(params, x[:, :11], cfg, cache=cache)
+    y_dec, _ = xlm.slstm_apply(params, x[:, 11:12], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_full[:, 11]),
+                               atol=2e-4)
+
+
+def test_mla_absorbed_decode_matches_decompressed():
+    """MLA decode (absorbed form) == prefill-style decompressed attention."""
+    cfg = configs.get_smoke("deepseek-v2-lite-16b", act_impl="exact")
+    params = cm.init_params(attn.mla_spec(cfg), jax.random.PRNGKey(6))
+    x = jnp.asarray(np.random.default_rng(6).normal(0, 0.5, (2, 9, cfg.d_model)),
+                    jnp.float32)
+    y_full, _ = attn.mla_apply(params, x, cfg)          # decompressed path
+    cache = attn.mla_init_cache(cfg, 2, 16, jnp.float32)
+    _, cache = attn.mla_apply(params, x[:, :8], cfg, cache=cache)
+    y_dec, _ = attn.mla_apply(params, x[:, 8:9], cfg, cache=cache)  # absorbed
+    np.testing.assert_allclose(np.asarray(y_dec[:, 0]), np.asarray(y_full[:, 8]),
+                               atol=2e-4)
+
+
+def test_scan_segments_match_python_loop():
+    """The lax.scan execution of stacked layers == sequential python apply."""
+    cfg = configs.get_smoke("yi-9b", act_impl="exact")
+    params = tf.init(cfg, jax.random.PRNGKey(7))
+    toks = jnp.asarray(np.random.default_rng(7).integers(0, cfg.vocab_size,
+                                                         (2, 16)), jnp.int32)
+    logits, _, _ = tf.apply(params, {"tokens": toks}, cfg)
+
+    # manual: unstack seg0 and loop
+    x = cm.embed(params["embed"], toks).astype(jnp.float32)
+    seg = params["seg0"]
+    for i in range(cfg.num_layers):
+        layer = jax.tree.map(lambda a: a[i], seg)
+        x, _, _ = tf.BLOCKS["dense"][1](layer, x, cfg, None, None)
+    x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    manual = cm.unembed(params["lm_head"], x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(manual),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_mla_chunked_prefill_matches_single_block():
+    """Regression: chunked causal path must handle D_qk != D_v (MLA)."""
+    cfg = configs.get_smoke("deepseek-v2-lite-16b", act_impl="exact")
+    cfg_chunked = dataclasses.replace(cfg, attn_chunk=8)
+    params = cm.init_params(attn.mla_spec(cfg), jax.random.PRNGKey(8))
+    x = jnp.asarray(np.random.default_rng(8).normal(0, 0.5, (2, 32, cfg.d_model)),
+                    jnp.float32)
+    y_single, _ = attn.mla_apply(params, x, cfg)
+    y_chunked, _ = attn.mla_apply(params, x, cfg_chunked)
+    np.testing.assert_allclose(np.asarray(y_single), np.asarray(y_chunked),
+                               atol=1e-5)
+
+
+def test_gqa_chunked_prefill_matches_single_block():
+    cfg = configs.get_smoke("qwen2.5-32b", act_impl="exact")
+    cfg_chunked = dataclasses.replace(cfg, attn_chunk=8)
+    params = cm.init_params(attn.gqa_spec(cfg), jax.random.PRNGKey(9))
+    x = jnp.asarray(np.random.default_rng(9).normal(0, 0.5, (2, 32, cfg.d_model)),
+                    jnp.float32)
+    y_single, _ = attn.gqa_apply(params, x, cfg)
+    y_chunked, _ = attn.gqa_apply(params, x, cfg_chunked)
+    np.testing.assert_allclose(np.asarray(y_single), np.asarray(y_chunked),
+                               atol=1e-5)
+
+
+def test_pad_heads_forward_exact():
+    """pad_heads_to=16: padded layout output == unpadded output exactly
+    (padded k/v are zero -> padded heads contribute nothing through wo)."""
+    cfg = configs.get_smoke("qwen2.5-32b", act_impl="exact")   # H=4, KH=2
+    cfg_pad = dataclasses.replace(cfg, pad_heads_to=3)          # KH'=3, H'=6
+    params = cm.init_params(attn.gqa_spec(cfg), jax.random.PRNGKey(10))
+    params_pad = cm.init_params(attn.gqa_spec(cfg_pad), jax.random.PRNGKey(11))
+    # copy the real weights into the padded layout, zero the padded k/v rows
+    G = cfg.num_heads // cfg.num_kv_heads
+    Hp = 3 * G
+    import numpy as onp
+
+    def pad3(w, n_real, n_pad):   # (d, heads, hd)
+        out = onp.asarray(params_pad[w]) * 0.0
+        out[:, :n_real] = onp.asarray(params[w])
+        return jnp.asarray(out)
+
+    params_pad = dict(params_pad)
+    params_pad["wq"] = pad3("wq", cfg.num_heads, Hp)
+    params_pad["wk"] = pad3("wk", cfg.num_kv_heads, 3)
+    params_pad["wv"] = pad3("wv", cfg.num_kv_heads, 3)
+    wo = onp.zeros((Hp, cfg.head_dim, cfg.d_model), onp.float32)
+    wo[: cfg.num_heads] = onp.asarray(params["wo"])
+    params_pad["wo"] = jnp.asarray(wo)
+    for b, n in (("bq", cfg.num_heads), ("bk", cfg.num_kv_heads),
+                 ("bv", cfg.num_kv_heads)):
+        arr = onp.zeros_like(onp.asarray(params_pad[b]))
+        arr[:n] = onp.asarray(params[b])
+        params_pad[b] = jnp.asarray(arr)
+
+    x = jnp.asarray(np.random.default_rng(12).normal(0, 0.5, (2, 16, cfg.d_model)),
+                    jnp.float32)
+    y_ref, _ = attn.gqa_apply(params, x, cfg)
+    y_pad, _ = attn.gqa_apply(params_pad, x, cfg_pad)
+    np.testing.assert_allclose(np.asarray(y_pad), np.asarray(y_ref), atol=2e-5)
+
+
+def test_pad_heads_decode_cache_shapes():
+    cfg = dataclasses.replace(configs.get_smoke("qwen2.5-32b", act_impl="exact"),
+                              pad_heads_to=3)
+    cache = attn.gqa_init_cache(cfg, 2, 8, jnp.float32)
+    assert cache["k"].shape == (2, 8, 3, cfg.head_dim)
+    params = cm.init_params(attn.gqa_spec(cfg), jax.random.PRNGKey(13))
+    x = jnp.asarray(np.random.default_rng(13).normal(0, 0.5, (2, 1, cfg.d_model)),
+                    jnp.float32)
+    y, c2 = attn.gqa_apply(params, x, cfg, cache=cache)
+    assert y.shape == (2, 1, cfg.d_model)
+    assert int(c2["idx"]) == 1
