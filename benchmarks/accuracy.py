@@ -5,11 +5,22 @@ Two regimes are reported:
   (b) a wide regime [-6, 6] where each baseline uses its natural segment
       domain and the proposed pipeline uses the dyadic range extension —
       this matches how the prior works' published MAEs were measured.
+
+Beyond the paper, the generalized-engine function library (exp, log,
+division, sin/cos, softplus/elu/gelu) and the fused CORDIC softmax kernel
+are benchmarked against their XLA-transcendental references.
+
+CLI: ``python benchmarks/accuracy.py --smoke [--out BENCH_accuracy.json]``
+runs the CI smoke subset (sigmoid/tanh/exp/softmax MAE) and writes JSON.
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.core import sigmoid as S
 from repro.core.cordic import MRSchedule
@@ -55,3 +66,75 @@ def run(csv_rows: list) -> None:
         st = error_stats(jax.jit(fn), S.sigmoid_exact, -6, 6)
         csv_rows.append((f"table2/wide_domain/{name}", st["mae"],
                          f"max={st['max']:.3e}"))
+
+    # --- generalized engine: beyond-sigmoid function library ---------------
+    from repro.cordic_engine import functions as F
+
+    engine_rows = [
+        ("exp[-4,4]", F.exp_fixed, jnp.exp, -4, 4),
+        ("log[0.1,10]", F.log_fixed, jnp.log, 0.1, 10),
+        ("reciprocal[0.1,10]", F.reciprocal_fixed, lambda x: 1.0 / x, 0.1, 10),
+        ("sin[-pi,pi]", F.sin_fixed, jnp.sin, -np.pi, np.pi),
+        ("cos[-pi,pi]", F.cos_fixed, jnp.cos, -np.pi, np.pi),
+        ("softplus[-6,6]", F.softplus_fixed, jax.nn.softplus, -6, 6),
+        ("elu[-6,6]", F.elu_fixed, jax.nn.elu, -6, 6),
+        ("gelu_erf[-6,6]", F.gelu_erf_fixed,
+         lambda x: jax.nn.gelu(x, approximate=False), -6, 6),
+    ]
+    for name, fn, ref, lo, hi in engine_rows:
+        st = error_stats(jax.jit(fn), ref, lo, hi)
+        csv_rows.append((f"engine/{name}", st["mae"], f"max={st['max']:.3e}"))
+
+    # fused softmax kernel vs jax.nn.softmax (interpret mode on CPU)
+    csv_rows.append(("engine/softmax_kernel(64x512)", _softmax_max_err(),
+                     "max-abs vs jax.nn.softmax"))
+
+
+def _softmax_max_err(rows: int = 64, cols: int = 512) -> float:
+    from repro.kernels import ops as kops
+
+    logits = jax.random.normal(jax.random.PRNGKey(0), (rows, cols)) * 4.0
+    got = np.asarray(kops.softmax(logits), np.float64)
+    want = np.asarray(jax.nn.softmax(logits), np.float64)
+    return float(np.abs(got - want).max())
+
+
+def smoke(out_path: str) -> dict:
+    """CI smoke subset: MAE for sigmoid/tanh/exp + softmax max-abs error.
+
+    Written as JSON so the CI run leaves a machine-readable accuracy record
+    (BENCH_accuracy.json) next to the logs.
+    """
+    from repro.cordic_engine import functions as F
+
+    res = {
+        "sigmoid_mae": error_stats(jax.jit(S.sigmoid_cordic_fixed),
+                                   S.sigmoid_exact, -1, 1)["mae"],
+        "tanh_mae": error_stats(jax.jit(S.tanh_cordic_fixed),
+                                S.tanh_exact, -0.5, 0.5)["mae"],
+        "exp_mae": error_stats(jax.jit(F.exp_fixed), jnp.exp, -4, 4)["mae"],
+        "softmax_max_abs": _softmax_max_err(),
+    }
+    # hard gates: same bounds the test suite enforces
+    assert res["sigmoid_mae"] < 1e-3, res
+    assert res["tanh_mae"] < 1e-3, res
+    assert res["exp_mae"] < 5e-2, res
+    assert res["softmax_max_abs"] < 1e-2, res
+    with open(out_path, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the CI smoke subset and write JSON")
+    ap.add_argument("--out", default="BENCH_accuracy.json")
+    args = ap.parse_args()
+    if args.smoke:
+        print(json.dumps(smoke(args.out), indent=2, sort_keys=True))
+    else:
+        rows: list = []
+        run(rows)
+        for name, value, derived in rows:
+            print(f"{name},{value:.6g},{derived}")

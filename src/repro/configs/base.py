@@ -72,6 +72,9 @@ class ModelConfig:
     mlp_kind: str = "swiglu"             # swiglu | gelu
     d_ff_dense: int = 0                  # dense-FFN width in MoE archs (0 -> d_ff)
     act_impl: str = "cordic_fixed"       # exact|cordic_float|cordic_fixed|cordic_pallas
+    softmax_impl: str = "exact"          # exact | cordic_fixed | cordic_pallas:
+                                         # attention-row softmax via the fused
+                                         # CORDIC-exp + LVC-normalize kernel
     attn_chunk: int = 1024
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None

@@ -1,0 +1,42 @@
+"""Generalized mixed-radix CORDIC engine.
+
+The paper's MR-HRC sigmoid pipeline is one point in a
+(mode x direction x schedule) design space; this package factors the
+machinery so every point is reachable:
+
+    schedule.py  — CordicSchedule (circular/linear/hyperbolic, mixed radix,
+                   repeats) + the paper's bundled MRSchedule
+    core.py      — the unified iteration engine, float + bit-accurate Q2.14
+    functions.py — exp, log, atanh, divide, reciprocal, sin/cos, softplus,
+                   elu, erf, gelu — each with dyadic range reduction
+
+``repro.core.cordic`` re-exports the paper specialization (bit-identical to
+the seed implementation); ``repro.kernels.softmax_cordic`` fuses the exp +
+linear-vectoring legs into one Pallas softmax kernel.
+"""
+from repro.cordic_engine.schedule import (  # noqa: F401
+    CIRC_ROTATION,
+    CIRCULAR,
+    HYP_ROTATION,
+    HYP_VECTORING,
+    HYPERBOLIC,
+    LIN_VECTORING,
+    LINEAR,
+    MRSchedule,
+    PAPER_SCHEDULE,
+    R2_BASELINE_SCHEDULE,
+    ROTATION,
+    VECTORING,
+    CordicSchedule,
+)
+from repro.cordic_engine.core import (  # noqa: F401
+    FixedConfig,
+    PAPER_FIXED,
+    rotate_f,
+    rotate_q,
+    sweep_f,
+    sweep_q,
+    vector_f,
+    vector_q,
+)
+from repro.cordic_engine import functions  # noqa: F401

@@ -1,0 +1,264 @@
+"""Mode-parameterized CORDIC core: one iteration engine for all six
+(mode x direction) combinations, in float and bit-accurate fixed point.
+
+The unified iteration (direction factor e, mode factor m_x):
+
+    x' = x + m_x * e * y * 2^-j        m_x = -1 circular, 0 linear, +1 hyperbolic
+    y' = y +       e * x * 2^-j
+    z' = z -       e * alpha_j(mode)
+
+    rotation:   e = sign(z)   (drive z -> 0; rotates (x, y) by z0)
+    vectoring:  e = -sign(y)  (drive y -> 0; accumulates z += f(y0/x0))
+
+Specialized to (hyperbolic, rotation) + (linear, vectoring) with the paper's
+schedules, the fixed-point sweeps below are *op-for-op identical* to the
+seed implementation that used to live in ``repro.core.cordic`` (same shift
+order, same where/add/sub structure, same ROM quantization) — so the paper
+pipeline built on top of this engine is bit-identical to the original,
+enforced over all 2^16 input codes in tests/test_cordic_engine.py.
+
+Fixed-point sweeps carry values in int32 lanes masked to ``cfg.fmt`` after
+every op (see repro.core.fixed_point); the z/angle register may be widened
+by ``cfg.z_guard`` fraction bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fp
+from repro.core.fixed_point import Q2_14, QFormat
+from repro.cordic_engine import schedule as sch
+from repro.cordic_engine.schedule import (
+    CIRCULAR,
+    HYPERBOLIC,
+    LINEAR,
+    ROTATION,
+    VECTORING,
+    CordicSchedule,
+    angle_r2,
+    angle_r4,
+)
+
+
+# --------------------------------------------------------------------------
+# Datapath quantization config (moved verbatim from core/cordic.py)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FixedConfig:
+    """Datapath quantization config.
+
+    ``fmt``        — x/y register format (the paper's 16-bit Q2.14).
+    ``z_guard``    — extra fraction bits on the z (angle) register. 0 keeps
+                     the strict 16-bit paper datapath; a few guard bits on the
+                     angle accumulator is a standard, cheap HW refinement
+                     (one slightly wider adder) studied in the accuracy bench.
+    ``shift_round``— rounding of datapath right-shifts: "trunc" is what a
+                     plain two's-complement `>>` does (the paper's adder-only
+                     datapath); "nearest" costs one extra adder per stage.
+    ``out_round``  — rounding of the final output requantization.
+    """
+
+    fmt: QFormat = Q2_14
+    z_guard: int = 0
+    shift_round: str = "trunc"
+    out_round: str = "nearest"
+
+    @property
+    def zfmt(self) -> QFormat:
+        if self.z_guard == 0:
+            return self.fmt
+        return QFormat(
+            total_bits=self.fmt.total_bits + self.z_guard,
+            frac_bits=self.fmt.frac_bits + self.z_guard,
+        )
+
+
+PAPER_FIXED = FixedConfig()
+
+
+# --------------------------------------------------------------------------
+# Float sweeps
+# --------------------------------------------------------------------------
+def radix2_sweep_f(x, y, z, js, mode: str, direction: str):
+    """Generic radix-2 CORDIC iterations in float. Returns (x, y, z)."""
+    for j in js:
+        a = angle_r2(mode, j)
+        f = 2.0 ** (-j)
+        if direction == ROTATION:
+            e = jnp.where(z >= 0, 1.0, -1.0).astype(y.dtype)
+        else:
+            e = jnp.where(y >= 0, -1.0, 1.0).astype(y.dtype)
+        if mode == HYPERBOLIC:
+            x_n = x + e * y * f
+        elif mode == CIRCULAR:
+            x_n = x - e * y * f
+        else:
+            x_n = x
+        x, y, z = x_n, y + e * x * f, z - e * a
+    return x, y, z
+
+
+def _r4_digit_f(z, j):
+    """SRT-style radix-4 digit selection on w = 4^j z (paper eq. (8))."""
+    w = z * (4.0 ** j)
+    return jnp.where(
+        w >= 1.5, 2.0,
+        jnp.where(w >= 0.5, 1.0, jnp.where(w >= -0.5, 0.0, jnp.where(w >= -1.5, -1.0, -2.0))),
+    ).astype(z.dtype)
+
+
+def radix4_sweep_f(x, y, z, js, mode: str = HYPERBOLIC, direction: str = ROTATION):
+    """Radix-4 hyperbolic rotation iterations, digit set {-2,-1,0,1,2}.
+
+    Started at j>=4 the cumulative gain is within 2^-14 of 1 (scale-free).
+    """
+    if mode != HYPERBOLIC or direction != ROTATION:
+        raise NotImplementedError("radix-4 sweep: hyperbolic rotation only")
+    for j in js:
+        s = _r4_digit_f(z, j)
+        mag = jnp.abs(s)
+        # atanh(s*4^-j) for s in {-2..2}; exploit oddness.
+        a = jnp.sign(s) * jnp.where(
+            mag == 2.0, angle_r4(mode, j, 2), jnp.where(mag == 1.0, angle_r4(mode, j, 1), 0.0)
+        ).astype(z.dtype)
+        f = s * (4.0 ** (-j))
+        x, y, z = x + f * y, y + f * x, z - a
+    return x, y, z
+
+
+def sweep_f(x, y, z, sched: CordicSchedule, direction: str):
+    """Full float sweep: radix-2 stage then (hyperbolic-only) radix-4 tail."""
+    x, y, z = radix2_sweep_f(x, y, z, sched.r2_js, sched.mode, direction)
+    if sched.r4_js:
+        x, y, z = radix4_sweep_f(x, y, z, sched.r4_js, sched.mode, direction)
+    return x, y, z
+
+
+# --------------------------------------------------------------------------
+# Fixed-point sweeps
+# --------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _q_angles_r2(mode: str, js: tuple, zfmt: QFormat):
+    """Pre-quantized radix-2 angle ROM in the z format.
+
+    Linear mode uses the exact power-of-two step the hardware would wire
+    (`1 << (frac - j)`, floored at 1) — identical to the seed R2-LVC."""
+    if mode == LINEAR:
+        return tuple(np.int32(1 << max(zfmt.frac_bits - j, 0)) for j in js)
+    return tuple(fp.const(angle_r2(mode, j), zfmt) for j in js)
+
+
+@lru_cache(maxsize=None)
+def _q_r4_consts(mode: str, js: tuple, zfmt: QFormat):
+    """Radix-4 ROM: atanh tables + SRT digit-selection thresholds."""
+    a1 = tuple(fp.const(angle_r4(mode, j, 1), zfmt) for j in js)
+    a2 = tuple(fp.const(angle_r4(mode, j, 2), zfmt) for j in js)
+    thr05 = tuple(fp.const(0.5 * 4.0 ** (-j), zfmt) for j in js)
+    thr15 = tuple(fp.const(1.5 * 4.0 ** (-j), zfmt) for j in js)
+    return a1, a2, thr05, thr15
+
+
+def radix2_sweep_q(x, y, z, js, mode: str, direction: str, cfg: FixedConfig):
+    """Generic radix-2 fixed-point sweep. x/y in cfg.fmt, z in cfg.zfmt."""
+    f, zf, rnd = cfg.fmt, cfg.zfmt, cfg.shift_round
+    angles = _q_angles_r2(mode, tuple(js), zf)
+    for i, j in enumerate(js):
+        a = angles[i]
+        # `plus` selects the e = +1 branch of the unified iteration.
+        plus = (z >= 0) if direction == ROTATION else (y < 0)
+        xs = fp.shr(x, j, f, rounding=rnd)
+        if mode != LINEAR:
+            ys = fp.shr(y, j, f, rounding=rnd)
+            if mode == HYPERBOLIC:
+                x_n = jnp.where(plus, fp.add(x, ys, f), fp.sub(x, ys, f))
+            else:
+                x_n = jnp.where(plus, fp.sub(x, ys, f), fp.add(x, ys, f))
+        else:
+            x_n = x
+        y_n = jnp.where(plus, fp.add(y, xs, f), fp.sub(y, xs, f))
+        z = jnp.where(plus, fp.sub(z, a, zf), fp.add(z, a, zf))
+        x, y = x_n, y_n
+    return x, y, z
+
+
+def radix4_sweep_q(x, y, z, js, mode: str, direction: str, cfg: FixedConfig):
+    """Fixed-point radix-4 hyperbolic rotation with SRT digit selection.
+
+    The digit compare is done directly on z against pre-scaled thresholds
+    (0.5*4^-j, 1.5*4^-j) — equivalent to comparing 4^j z against +-0.5/+-1.5
+    but without the left shift that could overflow the 16-bit register.
+    """
+    if mode != HYPERBOLIC or direction != ROTATION:
+        raise NotImplementedError("radix-4 sweep: hyperbolic rotation only")
+    f, zf, rnd = cfg.fmt, cfg.zfmt, cfg.shift_round
+    a1s, a2s, t05s, t15s = _q_r4_consts(mode, tuple(js), zf)
+    for i, j in enumerate(js):
+        t05, t15 = t05s[i], t15s[i]
+        a1, a2 = a1s[i], a2s[i]
+        # sigma in {-2,-1,0,1,2}
+        mag2 = (z >= t15) | (z < -t15)                    # |sigma| == 2
+        mag0 = (z < t05) & (z >= -t05)                    # sigma == 0
+        pos = z >= 0
+        # |sigma|*4^-j multiplies => shift by 2j (|s|=1) or 2j-1 (|s|=2).
+        xs1 = fp.shr(x, 2 * j, f, rounding=rnd)
+        ys1 = fp.shr(y, 2 * j, f, rounding=rnd)
+        xs2 = fp.shr(x, 2 * j - 1, f, rounding=rnd)
+        ys2 = fp.shr(y, 2 * j - 1, f, rounding=rnd)
+        dx = jnp.where(mag0, 0, jnp.where(mag2, ys2, ys1))
+        dy = jnp.where(mag0, 0, jnp.where(mag2, xs2, xs1))
+        da = jnp.where(mag0, 0, jnp.where(mag2, a2, a1))
+        x = jnp.where(pos, fp.add(x, dx, f), fp.sub(x, dx, f))
+        y = jnp.where(pos, fp.add(y, dy, f), fp.sub(y, dy, f))
+        z = jnp.where(pos, fp.sub(z, da, zf), fp.add(z, da, zf))
+    return x, y, z
+
+
+def sweep_q(x, y, z, sched: CordicSchedule, direction: str, cfg: FixedConfig):
+    """Full fixed-point sweep: radix-2 then (hyperbolic-only) radix-4 tail."""
+    x, y, z = radix2_sweep_q(x, y, z, sched.r2_js, sched.mode, direction, cfg)
+    if sched.r4_js:
+        x, y, z = radix4_sweep_q(x, y, z, sched.r4_js, sched.mode, direction, cfg)
+    return x, y, z
+
+
+# --------------------------------------------------------------------------
+# Canonical entry points (unit starts, guard-bit handling)
+# --------------------------------------------------------------------------
+def rotate_q(z_q, sched: CordicSchedule, cfg: FixedConfig = PAPER_FIXED):
+    """Rotation from the gain-folded unit start: x0 = 1/K, y0 = 0.
+
+    ``z_q`` is the angle in cfg.fmt codes. Returns (x, y, residual-z) with
+    x/y in cfg.fmt codes and z in cfg.zfmt codes:
+        hyperbolic: (cosh z, sinh z)   circular: (cos z, sin z)
+    """
+    x = jnp.full_like(z_q, jnp.int32(fp.const(sched.x0, cfg.fmt)))
+    y = jnp.zeros_like(z_q)
+    z = z_q << cfg.z_guard if cfg.z_guard else z_q  # extend angle register
+    return sweep_q(x, y, z, sched, ROTATION, cfg)
+
+
+def vector_q(x_q, y_q, sched: CordicSchedule, cfg: FixedConfig = PAPER_FIXED):
+    """Vectoring from (x_q, y_q): drives y -> 0, returns the z accumulator
+    in cfg.zfmt codes (linear: y0/x0; hyperbolic: atanh(y0/x0))."""
+    z = jnp.zeros_like(y_q)
+    _, _, z = sweep_q(x_q, y_q, z, sched, VECTORING, cfg)
+    return z
+
+
+def rotate_f(z, sched: CordicSchedule):
+    """Float rotation from the unit start. Returns (x, y, residual)."""
+    x = jnp.full_like(z, sched.x0)
+    y = jnp.zeros_like(z)
+    return sweep_f(x, y, z, sched, ROTATION)
+
+
+def vector_f(x, y, sched: CordicSchedule):
+    """Float vectoring: returns the accumulated z (y driven to 0)."""
+    z = jnp.zeros_like(y)
+    _, _, z = sweep_f(x, y, z, sched, VECTORING)
+    return z

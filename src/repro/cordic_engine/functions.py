@@ -1,0 +1,334 @@
+"""CORDIC function library: transcendental-free evaluators derived from the
+generalized engine, each as float-in/float-out with dyadic range reduction.
+
+Every function comes in two datapaths mirroring the sigmoid pipeline:
+
+    *_float  — the CORDIC algorithm in f32 (algorithmic error only),
+    *_fixed  — bit-accurate Q2.14 core (paper-style 16-bit datapath) with
+               float-only boundary ops (quantize/dequantize, dyadic 2^k
+               scaling via exp2, frexp mantissa extraction).
+
+Derivations (mode x direction -> function):
+
+    hyperbolic rotation   cosh z, sinh z            ->  exp z = cosh + sinh
+    hyperbolic vectoring  atanh(y/x)                ->  log m = 2 atanh((m-1)/(m+1))
+    linear vectoring      y/x                       ->  divide, reciprocal
+    circular rotation     cos z, sin z
+
+Range reduction:
+
+    exp:    x = k ln2 + r, |r| <= ln2/2; e^x = 2^k (cosh r + sinh r)
+    log:    x = m 2^p, m in [0.5, 1);   ln x = 2 atanh((m-1)/(m+1)) + p ln2
+    divide: y/x = (m_y/m_x) 2^(p_y-p_x), mantissa ratio in (0.5, 2)
+    sincos: t = n (pi/2) + r, |r| <= pi/4; quadrant swap/negate by n mod 4
+
+Composites: softplus = relu(x) + log(1 + exp(-|x|)); elu from exp;
+erf via the exponential approximation erf(u)^2 ~ 1 - exp(-u^2 (4/pi + a u^2)
+/ (1 + a u^2)) (a = 0.147, |err| < 2.5e-4), giving an erf-based GELU.
+
+Differentiable wrappers (custom_jvp from the primal output, like the
+sigmoid path) are installed by ``repro.core.activations.get_activation``;
+the raw forwards here are deliberately jvp-free so callers can pick.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fp
+from repro.cordic_engine import core as eng
+from repro.cordic_engine.core import FixedConfig, PAPER_FIXED
+from repro.cordic_engine.schedule import (
+    CIRC_ROTATION,
+    HYP_ROTATION,
+    HYP_VECTORING,
+    LIN_VECTORING,
+    CordicSchedule,
+)
+
+_LN2 = 0.6931471805599453
+_HALF_PI = math.pi / 2.0
+#: exp clamp: keeps 2^k inside normal f32 exponent range.
+_EXP_CLIP = 80.0
+_ERF_A = 0.147
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.float32) if not hasattr(x, "dtype") else x
+
+
+# --------------------------------------------------------------------------
+# exp (hyperbolic rotation: e^r = cosh r + sinh r)
+# --------------------------------------------------------------------------
+def coshsinh_fixed(r, sched: CordicSchedule = HYP_ROTATION,
+                   cfg: FixedConfig = PAPER_FIXED, clamp: bool = True):
+    """(cosh r, sinh r) for |r| <= 0.5 on the Q2.14 datapath."""
+    if clamp:
+        r = jnp.clip(r, -0.5, 0.5)
+    rq = fp.quantize(r, cfg.fmt)
+    c, s, _ = eng.rotate_q(rq, sched, cfg)
+    return fp.dequantize(c, cfg.fmt), fp.dequantize(s, cfg.fmt)
+
+
+def coshsinh_float(r, sched: CordicSchedule = HYP_ROTATION, clamp: bool = True):
+    if clamp:
+        r = jnp.clip(r, -0.5, 0.5)
+    c, s, _ = eng.rotate_f(r, sched)
+    return c, s
+
+
+def exp_fixed(x, sched: CordicSchedule = HYP_ROTATION,
+              cfg: FixedConfig = PAPER_FIXED):
+    """e^x over (-80, 80): dyadic reduction + Q2.14 cosh+sinh core.
+
+    The only non-shift-add ops are the boundary float multiply by 2^k and
+    the quantize/dequantize — the TPU analogue of the paper's "zero DSP"
+    datapath with a float wrapper.
+    """
+    x = jnp.clip(_f32(x), -_EXP_CLIP, _EXP_CLIP)
+    k = jnp.round(x * np.float32(1.0 / _LN2))
+    r = x - k * np.float32(_LN2)                       # |r| <= ln2/2 < 0.35
+    rq = fp.quantize(r, cfg.fmt)
+    c, s, _ = eng.rotate_q(rq, sched, cfg)
+    eq = fp.add(c, s, cfg.fmt)                         # e^r in (0.70, 1.42)
+    return fp.dequantize(eq, cfg.fmt) * jnp.exp2(k)
+
+
+def exp_float(x, sched: CordicSchedule = HYP_ROTATION):
+    x = jnp.clip(_f32(x), -_EXP_CLIP, _EXP_CLIP)
+    k = jnp.round(x * np.float32(1.0 / _LN2))
+    r = x - k * np.float32(_LN2)
+    c, s, _ = eng.rotate_f(r, sched)
+    return (c + s) * jnp.exp2(k)
+
+
+# --------------------------------------------------------------------------
+# atanh / log (hyperbolic vectoring)
+# --------------------------------------------------------------------------
+def atanh_fixed(t, sched: CordicSchedule = HYP_VECTORING,
+                cfg: FixedConfig = PAPER_FIXED, clamp: bool = True):
+    """atanh(t) for |t| <= 0.8 (clamped) via hyperbolic vectoring."""
+    if clamp:
+        t = jnp.clip(_f32(t), -0.8, 0.8)
+    one = fp.quantize(jnp.ones_like(t), cfg.fmt)
+    tq = fp.quantize(t, cfg.fmt)
+    z = eng.vector_q(one, tq, sched, cfg)
+    return fp.dequantize(z, cfg.zfmt)
+
+
+def atanh_float(t, sched: CordicSchedule = HYP_VECTORING, clamp: bool = True):
+    if clamp:
+        t = jnp.clip(_f32(t), -0.8, 0.8)
+    return eng.vector_f(jnp.ones_like(t), t, sched)
+
+
+def log_fixed(x, sched: CordicSchedule = HYP_VECTORING,
+              cfg: FixedConfig = PAPER_FIXED):
+    """ln x for x > 0: mantissa/exponent split + atanh identity.
+
+    x = m 2^p with m in [0.5, 1): ln x = 2 atanh((m-1)/(m+1)) + p ln2.
+    The vectoring runs on (x0, y0) = (m+1, m-1) — both inside Q2.14 —
+    so no division is ever materialized.
+    """
+    x = jnp.maximum(_f32(x), np.float32(1e-30))
+    m, p = jnp.frexp(x)                                # m in [0.5, 1)
+    num = fp.quantize(m - 1.0, cfg.fmt)                # in [-0.5, 0)
+    den = fp.quantize(m + 1.0, cfg.fmt)                # in [1.5, 2)
+    z = eng.vector_q(den, num, sched, cfg)
+    at = fp.dequantize(z, cfg.zfmt)
+    return 2.0 * at + p.astype(jnp.float32) * np.float32(_LN2)
+
+
+def log_float(x, sched: CordicSchedule = HYP_VECTORING):
+    x = jnp.maximum(_f32(x), np.float32(1e-30))
+    m, p = jnp.frexp(x)
+    at = eng.vector_f(m + 1.0, m - 1.0, sched)
+    return 2.0 * at + p.astype(jnp.float32) * np.float32(_LN2)
+
+
+# --------------------------------------------------------------------------
+# division (linear vectoring)
+# --------------------------------------------------------------------------
+def divide_fixed(y, x, sched: CordicSchedule = LIN_VECTORING,
+                 cfg: FixedConfig = PAPER_FIXED):
+    """y/x for finite nonzero x via linear vectoring on frexp mantissas.
+
+    The LVC z accumulator can only reach sum(2^-j) = 1 - 2^-14, so the
+    mantissa ratio is normalized *below one*: with m_y, m_x in [0.5, 1),
+    halve m_y exactly when m_y >= m_x (one compare + dyadic shift):
+
+        y/x = ((m_y / 2^h) / m_x) 2^(p_y - p_x + h),  ratio in [0.5, 1)
+
+    which keeps the truncation-bias-to-quotient amplification at its
+    minimum. x == 0 or y == 0 returns 0 (sign(0) kills the quotient).
+    """
+    y, x = _f32(y), _f32(x)
+    sign = jnp.sign(y) * jnp.sign(x)
+    my, py = jnp.frexp(jnp.abs(y))
+    mx, px = jnp.frexp(jnp.abs(x))
+    h = (my >= mx).astype(jnp.int32)
+    num = fp.quantize(jnp.where(h == 1, my * 0.5, my), cfg.fmt)
+    den = fp.quantize(jnp.maximum(mx, np.float32(0.5)), cfg.fmt)
+    z = eng.vector_q(den, num, sched, cfg)
+    q = fp.dequantize(z, cfg.zfmt)
+    return sign * q * jnp.exp2((py - px + h).astype(jnp.float32))
+
+
+def divide_float(y, x, sched: CordicSchedule = LIN_VECTORING):
+    y, x = _f32(y), _f32(x)
+    sign = jnp.sign(y) * jnp.sign(x)
+    my, py = jnp.frexp(jnp.abs(y))
+    mx, px = jnp.frexp(jnp.abs(x))
+    h = (my >= mx).astype(jnp.int32)
+    q = eng.vector_f(jnp.maximum(mx, np.float32(0.5)),
+                     jnp.where(h == 1, my * 0.5, my), sched)
+    return sign * q * jnp.exp2((py - px + h).astype(jnp.float32))
+
+
+def reciprocal_fixed(x, sched: CordicSchedule = LIN_VECTORING,
+                     cfg: FixedConfig = PAPER_FIXED):
+    return divide_fixed(jnp.ones_like(_f32(x)), x, sched, cfg)
+
+
+def reciprocal_float(x, sched: CordicSchedule = LIN_VECTORING):
+    return divide_float(jnp.ones_like(_f32(x)), x, sched)
+
+
+# --------------------------------------------------------------------------
+# sin / cos (circular rotation)
+# --------------------------------------------------------------------------
+def _quadrant_fix(c, s, quad):
+    cos = jnp.select([quad == 0, quad == 1, quad == 2], [c, -s, -c], s)
+    sin = jnp.select([quad == 0, quad == 1, quad == 2], [s, c, -s], -c)
+    return sin, cos
+
+
+def sincos_fixed(t, sched: CordicSchedule = CIRC_ROTATION,
+                 cfg: FixedConfig = PAPER_FIXED):
+    """(sin t, cos t): reduce to |r| <= pi/4, rotate, quadrant-correct."""
+    t = _f32(t)
+    n = jnp.round(t * np.float32(1.0 / _HALF_PI))
+    r = t - n * np.float32(_HALF_PI)
+    quad = jnp.mod(n, 4.0).astype(jnp.int32)
+    rq = fp.quantize(r, cfg.fmt)
+    c, s, _ = eng.rotate_q(rq, sched, cfg)
+    return _quadrant_fix(fp.dequantize(c, cfg.fmt), fp.dequantize(s, cfg.fmt), quad)
+
+
+def sincos_float(t, sched: CordicSchedule = CIRC_ROTATION):
+    t = _f32(t)
+    n = jnp.round(t * np.float32(1.0 / _HALF_PI))
+    r = t - n * np.float32(_HALF_PI)
+    quad = jnp.mod(n, 4.0).astype(jnp.int32)
+    c, s, _ = eng.rotate_f(r, sched)
+    return _quadrant_fix(c, s, quad)
+
+
+def sin_fixed(t, cfg: FixedConfig = PAPER_FIXED):
+    return sincos_fixed(t, cfg=cfg)[0]
+
+
+def cos_fixed(t, cfg: FixedConfig = PAPER_FIXED):
+    return sincos_fixed(t, cfg=cfg)[1]
+
+
+def sin_float(t):
+    return sincos_float(t)[0]
+
+
+def cos_float(t):
+    return sincos_float(t)[1]
+
+
+# --------------------------------------------------------------------------
+# Composite activations
+# --------------------------------------------------------------------------
+def softplus_fixed(x, cfg: FixedConfig = PAPER_FIXED):
+    """log(1 + e^x) = relu(x) + log(1 + e^-|x|) — both CORDIC legs."""
+    x = _f32(x)
+    e = exp_fixed(-jnp.abs(x), cfg=cfg)                # in (0, 1]
+    return jnp.maximum(x, 0.0) + log_fixed(1.0 + e, cfg=cfg)
+
+
+def softplus_float(x):
+    x = _f32(x)
+    e = exp_float(-jnp.abs(x))
+    return jnp.maximum(x, 0.0) + log_float(1.0 + e)
+
+
+def elu_fixed(x, alpha: float = 1.0, cfg: FixedConfig = PAPER_FIXED):
+    x = _f32(x)
+    em1 = exp_fixed(jnp.minimum(x, 0.0), cfg=cfg) - 1.0
+    return jnp.where(x > 0, x, np.float32(alpha) * em1)
+
+
+def elu_float(x, alpha: float = 1.0):
+    x = _f32(x)
+    em1 = exp_float(jnp.minimum(x, 0.0)) - 1.0
+    return jnp.where(x > 0, x, np.float32(alpha) * em1)
+
+
+def _erf_from_exp(u, exp_fn):
+    """Exponential erf approximation (|err| < 2.5e-4); sqrt is a boundary op."""
+    u = _f32(u)
+    u2 = u * u
+    g = u2 * (np.float32(4.0 / math.pi) + np.float32(_ERF_A) * u2) \
+        / (1.0 + np.float32(_ERF_A) * u2)
+    return jnp.sign(u) * jnp.sqrt(jnp.maximum(1.0 - exp_fn(-g), 0.0))
+
+
+def erf_fixed(u, cfg: FixedConfig = PAPER_FIXED):
+    return _erf_from_exp(u, lambda v: exp_fixed(v, cfg=cfg))
+
+
+def erf_float(u):
+    return _erf_from_exp(u, exp_float)
+
+
+def gelu_erf_fixed(x, cfg: FixedConfig = PAPER_FIXED):
+    """Exact-form GELU 0.5 x (1 + erf(x/sqrt2)) with CORDIC-exp erf."""
+    x = _f32(x)
+    return 0.5 * x * (1.0 + erf_fixed(x * np.float32(1.0 / math.sqrt(2.0)), cfg))
+
+
+def gelu_erf_float(x):
+    x = _f32(x)
+    return 0.5 * x * (1.0 + erf_float(x * np.float32(1.0 / math.sqrt(2.0))))
+
+
+# --------------------------------------------------------------------------
+# softmax (CORDIC exp + linear-vectoring normalization) — jnp reference for
+# the fused Pallas kernel in repro.kernels.softmax_cordic
+# --------------------------------------------------------------------------
+def softmax_fixed(x, axis: int = -1, cfg: FixedConfig = PAPER_FIXED):
+    """softmax along `axis`: max-subtract, CORDIC exp, LVC division.
+
+    Fully masked lanes (<= -1e30 after max-subtract) decay to 0 through the
+    exp clamp, matching jax.nn.softmax on padded attention rows up to the
+    engine's ~1e-3 pointwise error. Raw forward — differentiating through
+    the quantize/frexp boundary ops gives garbage; use ``softmax`` below.
+    """
+    x = _f32(x)
+    u = x - jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = exp_fixed(u, cfg=cfg)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return divide_fixed(e, s, cfg=cfg)
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def softmax(x, axis: int = -1):
+    """Differentiable CORDIC softmax (jnp fixed path): the analytic softmax
+    tangent dy = y*(dx - sum(y dx)) from the primal output, like the
+    sigmoid/tanh activation wrappers."""
+    return softmax_fixed(x, axis=axis)
+
+
+@softmax.defjvp
+def _softmax_jvp(axis, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = softmax(x, axis)
+    return y, y * (dx - jnp.sum(y * dx, axis=axis, keepdims=True))

@@ -1,13 +1,23 @@
-"""Core: the paper's MR-HRC + R2-LVC CORDIC sigmoid and the activation registry."""
-from repro.core.cordic import (  # noqa: F401
-    FixedConfig,
-    MRSchedule,
-    PAPER_FIXED,
-    PAPER_SCHEDULE,
-    R2_BASELINE_SCHEDULE,
-    sigmoid_fixed,
-    sigmoid_mr_f,
-    tanh_fixed,
-    tanh_mr_f,
+"""Core: the paper's MR-HRC + R2-LVC CORDIC sigmoid and the activation registry.
+
+Re-exports are lazy (PEP 562): ``repro.core.cordic`` now builds on
+``repro.cordic_engine``, which itself needs ``repro.core.fixed_point`` — an
+eager import here would close that cycle before either side finishes.
+"""
+_CORDIC_EXPORTS = (
+    "FixedConfig", "MRSchedule", "PAPER_FIXED", "PAPER_SCHEDULE",
+    "R2_BASELINE_SCHEDULE", "sigmoid_fixed", "sigmoid_mr_f", "tanh_fixed",
+    "tanh_mr_f",
 )
-from repro.core.activations import get_activation  # noqa: F401
+
+
+def __getattr__(name):
+    if name in _CORDIC_EXPORTS:
+        from repro.core import cordic
+
+        return getattr(cordic, name)
+    if name == "get_activation":
+        from repro.core.activations import get_activation
+
+        return get_activation
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,6 +21,10 @@ use ``range_mode``:
     "clamp"  — saturate into the paper domain (paper-faithful),
     "reduce" — dyadic argument reduction to |x| <= 8 (beyond-paper, default
                for model configs; see core/sigmoid.sigmoid_cordic_wide).
+
+Beyond the sigmoid/tanh family, the generalized engine
+(repro.cordic_engine) contributes "exp", "softplus", "elu", and "gelu_erf"
+kinds — all shift-add CORDIC cores with dyadic range reduction built in.
 """
 from __future__ import annotations
 
@@ -102,12 +106,64 @@ def _tanh_fwd(impl: str, range_mode: str, sched: MRSchedule, cfg: FixedConfig):
     return lambda z: 2.0 * sig(2.0 * z) - 1.0
 
 
+def _with_output_jvp(fwd: Callable, tangent_from_primal: Callable) -> Callable:
+    """custom_jvp computing the tangent coefficient from (x, primal y)."""
+    @jax.custom_jvp
+    def f(x):
+        return fwd(x)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (x,), (dx,) = primals, tangents
+        y = f(x)
+        return y, tangent_from_primal(x, y) * dx
+
+    return f
+
+
+def _engine_fwd(kind: str, impl: str, cfg: FixedConfig):
+    """Forward fn for the engine-derived kinds (exp/softplus/elu/gelu_erf).
+
+    ``cordic_pallas`` maps to the fixed jnp path for these kinds — they have
+    no dedicated kernel yet (the fused softmax kernel covers the hot exp
+    path); the datapath math is identical either way.
+    """
+    from repro.cordic_engine import functions as F
+
+    fixed = impl in ("cordic_fixed", "cordic_pallas")
+    table = {
+        "exp": (jnp.exp, F.exp_float, lambda x: F.exp_fixed(x, cfg=cfg)),
+        "softplus": (jax.nn.softplus, F.softplus_float,
+                     lambda x: F.softplus_fixed(x, cfg=cfg)),
+        "elu": (jax.nn.elu, F.elu_float, lambda x: F.elu_fixed(x, cfg=cfg)),
+        "gelu_erf": (partial(jax.nn.gelu, approximate=False), F.gelu_erf_float,
+                     lambda x: F.gelu_erf_fixed(x, cfg=cfg)),
+    }
+    exact, flt, fxd = table[kind]
+    if impl == "exact":
+        return exact
+    return fxd if fixed else flt
+
+
+#: tangent coefficients from (x, primal) for the engine-derived kinds.
+_ENGINE_JVPS = {
+    "exp": lambda x, y: y,
+    "softplus": lambda x, y: -jnp.expm1(-y),            # sigma(x) = 1 - e^-y
+    "elu": lambda x, y: jnp.where(x > 0, 1.0, y + 1.0),  # y + alpha = alpha e^x
+    # gelu'(x) = Phi(x) + x phi(x); cheap closed form, exact to first order
+    "gelu_erf": lambda x, y: jax.scipy.stats.norm.cdf(x)
+    + x * jax.scipy.stats.norm.pdf(x),
+}
+
+
 def get_activation(kind: str, impl: str = "exact", range_mode: str = "reduce",
                    sched: MRSchedule = PAPER_SCHEDULE,
                    cfg: FixedConfig = PAPER_FIXED) -> Callable:
     """Return a differentiable activation fn of the requested kind/impl.
 
-    kind in {"sigmoid", "tanh", "silu", "gelu_tanh", "relu", "gelu"}.
+    kind in {"sigmoid", "tanh", "silu", "gelu_tanh", "relu", "gelu",
+             "exp", "softplus", "elu", "gelu_erf"} — the last four are
+    derived from the generalized engine (repro.cordic_engine.functions).
     """
     if impl not in ACT_IMPLS:
         raise ValueError(f"impl {impl!r} not in {ACT_IMPLS}")
@@ -118,6 +174,10 @@ def get_activation(kind: str, impl: str = "exact", range_mode: str = "reduce",
         return jax.nn.relu
     if kind == "gelu":
         return jax.nn.gelu
+
+    if kind in _ENGINE_JVPS:
+        fwd = _engine_fwd(kind, impl, cfg)
+        return fwd if impl == "exact" else _with_output_jvp(fwd, _ENGINE_JVPS[kind])
 
     if kind == "sigmoid":
         fwd = _sigmoid_fwd(impl, range_mode, sched, cfg)

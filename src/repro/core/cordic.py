@@ -1,21 +1,23 @@
-"""Mixed-Radix Hyperbolic Rotation CORDIC (MR-HRC) + Radix-2 Linear Vectoring
-CORDIC (R2-LVC) — the paper's core contribution.
+"""The paper's sigmoid pipeline, specialized from the generalized CORDIC
+engine in ``repro.cordic_engine``.
 
-Pipeline (paper Fig. 2):
+This module used to *be* the implementation; it is now a thin facade that
+instantiates the mode-parameterized engine with the paper's schedule:
 
-    z = x/2  -->  [ MR-HRC: R2-HRC j=2..9, then R4-HRC j=4..7 ]  --> (cosh z, sinh z)
-             -->  [ R2-LVC j=1..14 ]  --> tanh z = sinh/cosh
+    z = x/2  -->  [ MR-HRC: hyperbolic rotation, R2 j=2..9 + R4 j=4..7 ]
+             -->  (cosh z, sinh z)
+             -->  [ R2-LVC: linear vectoring, j=1..14 ]  -->  tanh z
              -->  sigmoid(x) = 1/2 + 1/2 * tanh z
 
-Two parallel implementations are provided for every stage:
+Everything below delegates to ``cordic_engine.core`` (the generic radix-2 /
+radix-4 sweeps) and is **bit-identical** to the original seed implementation
+— enforced over all 2^16 input codes against the independent Pallas
+transcription in ``kernels/cordic_act.py`` (tests/test_cordic_engine.py).
 
-* ``*_f``    — float (f32/f64) reference of the *algorithm* (no quantization),
-* ``*_q``    — bit-accurate fixed-point (Q2.14 by default) matching a 16-bit
-               two's-complement hardware datapath, including shift truncation.
-
-All loops are unrolled over *static* schedules (8 + 4 + 14 = 26 iterations),
-so everything traces to straight-line HLO — exactly how the fully-pipelined
-hardware is laid out, one adder stage per iteration.
+For the general machinery (circular/linear modes, exp, log, division,
+sin/cos, softplus/elu/gelu) see ``repro.cordic_engine``; schedules and the
+``FixedConfig`` datapath config also live there and are re-exported here
+for backward compatibility.
 
 Convergence facts (verified in tests/test_cordic_properties.py):
 
@@ -28,148 +30,49 @@ Convergence facts (verified in tests/test_cordic_properties.py):
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from functools import lru_cache
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import fixed_point as fp
-from repro.core.fixed_point import Q2_14, QFormat
-
-
-# --------------------------------------------------------------------------
-# Schedules & constants
-# --------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class MRSchedule:
-    """Iteration schedule for the MR-HRC + R2-LVC pipeline.
-
-    The defaults are exactly the paper's: radix-2 j=2..9, radix-4 j=4..7,
-    and (the paper leaves LVC unspecified) LVC j=1..14 for a 16-bit result.
-    """
-
-    r2_js: tuple = tuple(range(2, 10))
-    r4_js: tuple = tuple(range(4, 8))
-    lvc_js: tuple = tuple(range(1, 15))
-
-    @property
-    def r2_gain(self) -> float:
-        """K_h — the constant radix-2 stage gain, folded into x0 = 1/K_h."""
-        p = 1.0
-        for j in self.r2_js:
-            p *= math.sqrt(1.0 - 2.0 ** (-2 * j))
-        return p
-
-    @property
-    def x0(self) -> float:
-        return 1.0 / self.r2_gain
-
-    @property
-    def r2_range(self) -> float:
-        """Convergence range of the radix-2 stage (paper eq. (5))."""
-        return sum(math.atanh(2.0 ** (-j)) for j in self.r2_js)
-
-    @property
-    def r4_range(self) -> float:
-        """Admissible input range of the radix-4 stage (paper eq. (6))."""
-        return sum(math.atanh(2.0 * 4.0 ** (-j)) for j in self.r4_js)
-
-    @property
-    def r4_gain_bounds(self) -> tuple:
-        """(min, max) cumulative radix-4 gain over all digit sequences."""
-        lo = 1.0
-        for j in self.r4_js:
-            lo *= math.sqrt(1.0 - 4.0 * 4.0 ** (-2 * j))
-        return lo, 1.0
-
-    def num_iterations(self) -> int:
-        return len(self.r2_js) + len(self.r4_js) + len(self.lvc_js)
-
-
-PAPER_SCHEDULE = MRSchedule()
-
-#: Pure radix-2 baseline ("conventional R2-HRC"): same accuracy floor needs
-#: j=2..14 *with* the textbook repetition of j=4 and j=13 for gap-free
-#: convergence (repeats make the per-step convergence inequality hold).
-R2_BASELINE_SCHEDULE = MRSchedule(
-    r2_js=(2, 3, 4, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 13, 14),
-    r4_js=(),
-    lvc_js=tuple(range(1, 15)),
+from repro.cordic_engine import core as eng
+from repro.cordic_engine.core import FixedConfig, PAPER_FIXED  # noqa: F401
+from repro.cordic_engine.schedule import (  # noqa: F401
+    HYPERBOLIC,
+    LINEAR,
+    ROTATION,
+    VECTORING,
+    MRSchedule,
+    PAPER_SCHEDULE,
+    R2_BASELINE_SCHEDULE,
+    CordicSchedule,
 )
 
 
-def _atanh_r2(j: int) -> float:
-    return math.atanh(2.0 ** (-j))
-
-
-def _atanh_r4(j: int, mag: int) -> float:
-    return math.atanh(mag * 4.0 ** (-j))
+#: SRT digit selection (float), kept under its historical name for tests.
+_r4_digit_f = eng._r4_digit_f
 
 
 # --------------------------------------------------------------------------
-# Float reference implementations (algorithmic fidelity, no quantization)
+# Float reference implementations (engine specializations)
 # --------------------------------------------------------------------------
 def r2_hrc_f(x, y, z, js) -> tuple:
     """Radix-2 hyperbolic rotation iterations (d = sign(z), never 0)."""
-    for j in js:
-        a = _atanh_r2(j)
-        d = jnp.where(z >= 0, 1.0, -1.0).astype(x.dtype)
-        x, y, z = (
-            x + d * y * (2.0 ** (-j)),
-            y + d * x * (2.0 ** (-j)),
-            z - d * a,
-        )
-    return x, y, z
-
-
-def _r4_digit_f(z, j):
-    """SRT-style radix-4 digit selection on w = 4^j z (paper eq. (8))."""
-    w = z * (4.0 ** j)
-    return jnp.where(
-        w >= 1.5, 2.0,
-        jnp.where(w >= 0.5, 1.0, jnp.where(w >= -0.5, 0.0, jnp.where(w >= -1.5, -1.0, -2.0))),
-    ).astype(z.dtype)
+    return eng.radix2_sweep_f(x, y, z, js, HYPERBOLIC, ROTATION)
 
 
 def r4_hrc_f(x, y, z, js) -> tuple:
-    """Radix-4 hyperbolic rotation iterations, digit set {-2,-1,0,1,2}.
-
-    Started at j>=4 the cumulative gain is within 2^-14 of 1 (scale-free).
-    """
-    for j in js:
-        s = _r4_digit_f(z, j)
-        mag = jnp.abs(s)
-        # atanh(s*4^-j) for s in {-2..2}; exploit oddness.
-        a = jnp.sign(s) * jnp.where(
-            mag == 2.0, _atanh_r4(j, 2), jnp.where(mag == 1.0, _atanh_r4(j, 1), 0.0)
-        ).astype(z.dtype)
-        f = s * (4.0 ** (-j))
-        x, y, z = x + f * y, y + f * x, z - a
-    return x, y, z
+    """Radix-4 hyperbolic rotation iterations, digit set {-2,-1,0,1,2}."""
+    return eng.radix4_sweep_f(x, y, z, js)
 
 
 def mr_hrc_f(z, sched: MRSchedule = PAPER_SCHEDULE) -> tuple:
     """Mixed-radix HRC: returns (cosh z, sinh z, residual angle)."""
-    x = jnp.full_like(z, sched.x0)
-    y = jnp.zeros_like(z)
-    x, y, z = r2_hrc_f(x, y, z, sched.r2_js)
-    x, y, z = r4_hrc_f(x, y, z, sched.r4_js)
-    return x, y, z
+    return eng.rotate_f(z, sched.rotation)
 
 
 def r2_lvc_f(x, y, js) -> jax.Array:
-    """Radix-2 linear vectoring: drives y -> 0, accumulating z -> y0/x0.
-
-    Valid for |y0/x0| <= 2 and x0 > 0 (cosh is always positive here).
-    """
-    z = jnp.zeros_like(y)
-    for j in js:
-        d = jnp.where(y >= 0, 1.0, -1.0).astype(y.dtype)
-        y, z = y - d * x * (2.0 ** (-j)), z + d * (2.0 ** (-j))
-    return z
+    """Radix-2 linear vectoring: drives y -> 0, accumulating z -> y0/x0."""
+    return eng.vector_f(x, y, CordicSchedule(LINEAR, tuple(js)))
 
 
 def tanh_mr_f(z, sched: MRSchedule = PAPER_SCHEDULE) -> jax.Array:
@@ -187,99 +90,14 @@ def sigmoid_mr_f(x, sched: MRSchedule = PAPER_SCHEDULE) -> jax.Array:
 # --------------------------------------------------------------------------
 # Fixed-point (bit-accurate) implementations
 # --------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class FixedConfig:
-    """Datapath quantization config.
-
-    ``fmt``        — x/y register format (the paper's 16-bit Q2.14).
-    ``z_guard``    — extra fraction bits on the z (angle) register. 0 keeps
-                     the strict 16-bit paper datapath; a few guard bits on the
-                     angle accumulator is a standard, cheap HW refinement
-                     (one slightly wider adder) studied in the accuracy bench.
-    ``shift_round``— rounding of datapath right-shifts: "trunc" is what a
-                     plain two's-complement `>>` does (the paper's adder-only
-                     datapath); "nearest" costs one extra adder per stage.
-    ``out_round``  — rounding of the final output requantization.
-    """
-
-    fmt: QFormat = Q2_14
-    z_guard: int = 0
-    shift_round: str = "trunc"
-    out_round: str = "nearest"
-
-    @property
-    def zfmt(self) -> QFormat:
-        if self.z_guard == 0:
-            return self.fmt
-        return QFormat(
-            total_bits=self.fmt.total_bits + self.z_guard,
-            frac_bits=self.fmt.frac_bits + self.z_guard,
-        )
-
-
-PAPER_FIXED = FixedConfig()
-
-
-@lru_cache(maxsize=None)
-def _q_constants(sched: MRSchedule, cfg: FixedConfig):
-    """Pre-quantized ROM constants (atanh tables, thresholds, x0)."""
-    zf = cfg.zfmt
-    r2_atanh = tuple(fp.const(_atanh_r2(j), zf) for j in sched.r2_js)
-    r4_atanh1 = tuple(fp.const(_atanh_r4(j, 1), zf) for j in sched.r4_js)
-    r4_atanh2 = tuple(fp.const(_atanh_r4(j, 2), zf) for j in sched.r4_js)
-    # Digit-selection thresholds 0.5*4^-j / 1.5*4^-j, in the z format.
-    thr05 = tuple(fp.const(0.5 * 4.0 ** (-j), zf) for j in sched.r4_js)
-    thr15 = tuple(fp.const(1.5 * 4.0 ** (-j), zf) for j in sched.r4_js)
-    x0 = fp.const(sched.x0, cfg.fmt)
-    return dict(r2_atanh=r2_atanh, r4_atanh1=r4_atanh1, r4_atanh2=r4_atanh2,
-                thr05=thr05, thr15=thr15, x0=x0)
-
-
 def r2_hrc_q(x, y, z, sched: MRSchedule, cfg: FixedConfig):
     """Fixed-point radix-2 HRC. x/y in cfg.fmt, z in cfg.zfmt (int32 lanes)."""
-    k = _q_constants(sched, cfg)
-    f, zf, rnd = cfg.fmt, cfg.zfmt, cfg.shift_round
-    for i, j in enumerate(sched.r2_js):
-        d_pos = z >= 0
-        xs = fp.shr(x, j, f, rounding=rnd)
-        ys = fp.shr(y, j, f, rounding=rnd)
-        a = k["r2_atanh"][i]
-        x, y = (
-            jnp.where(d_pos, fp.add(x, ys, f), fp.sub(x, ys, f)),
-            jnp.where(d_pos, fp.add(y, xs, f), fp.sub(y, xs, f)),
-        )
-        z = jnp.where(d_pos, fp.sub(z, a, zf), fp.add(z, a, zf))
-    return x, y, z
+    return eng.radix2_sweep_q(x, y, z, sched.r2_js, HYPERBOLIC, ROTATION, cfg)
 
 
 def r4_hrc_q(x, y, z, sched: MRSchedule, cfg: FixedConfig):
-    """Fixed-point radix-4 HRC with SRT digit selection.
-
-    The digit compare is done directly on z against pre-scaled thresholds
-    (0.5*4^-j, 1.5*4^-j) — equivalent to comparing 4^j z against +-0.5/+-1.5
-    but without the left shift that could overflow the 16-bit register.
-    """
-    k = _q_constants(sched, cfg)
-    f, zf, rnd = cfg.fmt, cfg.zfmt, cfg.shift_round
-    for i, j in enumerate(sched.r4_js):
-        t05, t15 = k["thr05"][i], k["thr15"][i]
-        a1, a2 = k["r4_atanh1"][i], k["r4_atanh2"][i]
-        # sigma in {-2,-1,0,1,2}
-        mag2 = (z >= t15) | (z < -t15)                    # |sigma| == 2
-        mag0 = (z < t05) & (z >= -t05)                    # sigma == 0
-        pos = z >= 0
-        # |sigma|*4^-j multiplies => shift by 2j (|s|=1) or 2j-1 (|s|=2).
-        xs1 = fp.shr(x, 2 * j, f, rounding=rnd)
-        ys1 = fp.shr(y, 2 * j, f, rounding=rnd)
-        xs2 = fp.shr(x, 2 * j - 1, f, rounding=rnd)
-        ys2 = fp.shr(y, 2 * j - 1, f, rounding=rnd)
-        dx = jnp.where(mag0, 0, jnp.where(mag2, ys2, ys1))
-        dy = jnp.where(mag0, 0, jnp.where(mag2, xs2, xs1))
-        da = jnp.where(mag0, 0, jnp.where(mag2, a2, a1))
-        x = jnp.where(pos, fp.add(x, dx, f), fp.sub(x, dx, f))
-        y = jnp.where(pos, fp.add(y, dy, f), fp.sub(y, dy, f))
-        z = jnp.where(pos, fp.sub(z, da, zf), fp.add(z, da, zf))
-    return x, y, z
+    """Fixed-point radix-4 HRC with SRT digit selection."""
+    return eng.radix4_sweep_q(x, y, z, sched.r4_js, HYPERBOLIC, ROTATION, cfg)
 
 
 def mr_hrc_q(z_q, sched: MRSchedule = PAPER_SCHEDULE, cfg: FixedConfig = PAPER_FIXED):
@@ -287,28 +105,12 @@ def mr_hrc_q(z_q, sched: MRSchedule = PAPER_SCHEDULE, cfg: FixedConfig = PAPER_F
 
     Returns (cosh_q, sinh_q, residual_q[z-format]).
     """
-    k = _q_constants(sched, cfg)
-    x = jnp.full_like(z_q, jnp.int32(k["x0"]))
-    y = jnp.zeros_like(z_q)
-    z = z_q << cfg.z_guard if cfg.z_guard else z_q  # extend angle register
-    x, y, z = r2_hrc_q(x, y, z, sched, cfg)
-    x, y, z = r4_hrc_q(x, y, z, sched, cfg)
-    return x, y, z
+    return eng.rotate_q(z_q, sched.rotation, cfg)
 
 
 def r2_lvc_q(x, y, sched: MRSchedule, cfg: FixedConfig):
     """Fixed-point linear vectoring. Result z in cfg.zfmt codes."""
-    f, zf, rnd = cfg.fmt, cfg.zfmt, cfg.shift_round
-    z = jnp.zeros_like(y)
-    if cfg.z_guard:
-        z = z << 0  # stays int32 lane; z-format is wider only logically
-    for j in sched.lvc_js:
-        d_pos = y >= 0
-        xs = fp.shr(x, j, f, rounding=rnd)
-        step = jnp.int32(1) << max(cfg.zfmt.frac_bits - j, 0)
-        y = jnp.where(d_pos, fp.sub(y, xs, f), fp.add(y, xs, f))
-        z = jnp.where(d_pos, fp.add(z, step, zf), fp.sub(z, step, zf))
-    return z
+    return eng.vector_q(x, y, sched.division, cfg)
 
 
 def tanh_mr_q(z_q, sched: MRSchedule = PAPER_SCHEDULE, cfg: FixedConfig = PAPER_FIXED):

@@ -54,12 +54,10 @@ def _shr(v, s: int, bits: int):
     return _wrap16(v >> s, bits)
 
 
-def _cordic_tanh_q(zq, sched: MRSchedule, cfg: FixedConfig):
-    """Q2.14 int32-lane tanh pipeline; bit-identical to core.cordic.tanh_mr_q.
-
-    zq: int32 codes of the angle z in cfg.fmt, |z| <= 0.5. Returns int32
-    codes of tanh(z) in cfg.fmt.
-    """
+def _coshsinh_q(zq, sched: MRSchedule, cfg: FixedConfig):
+    """Q2.14 MR-HRC rotation stage: zq (cfg.fmt angle codes) -> (cosh, sinh)
+    codes. Shared by the tanh pipeline and the fused softmax-exp kernel
+    (e^r = cosh r + sinh r). Bit-identical to core.cordic.mr_hrc_q."""
     bits = cfg.fmt.total_bits
     fb = cfg.fmt.frac_bits
     zbits = cfg.zfmt.total_bits
@@ -105,19 +103,44 @@ def _cordic_tanh_q(zq, sched: MRSchedule, cfg: FixedConfig):
         y = jnp.where(pos, _wrap16(y + dy, bits), _wrap16(y - dy, bits))
         z = jnp.where(pos, _wrap16(z - da, zbits), _wrap16(z + da, zbits))
 
-    # --- radix-2 LVC stage: t = y/x (tanh) ---------------------------------
-    t = jnp.zeros_like(zq)
+    return x, y
+
+
+def _lvc_div_q(x, y, sched: MRSchedule, cfg: FixedConfig):
+    """Radix-2 linear vectoring: y/x in cfg.zfmt codes (no guard-bit drop).
+
+    Shared by the tanh pipeline (t = sinh/cosh) and the softmax kernel's
+    normalization (p = e_i / sum). Bit-identical to core.cordic.r2_lvc_q.
+    """
+    bits = cfg.fmt.total_bits
+    zbits = cfg.zfmt.total_bits
+    zfb = cfg.zfmt.frac_bits
+    t = jnp.zeros_like(y)
     for j in sched.lvc_js:
         pos = y >= 0
         xs = _shr(x, j, bits)
         step = _I32(1 << max(zfb - j, 0))
         y = jnp.where(pos, _wrap16(y - xs, bits), _wrap16(y + xs, bits))
         t = jnp.where(pos, _wrap16(t + step, zbits), _wrap16(t - step, zbits))
-
-    if cfg.z_guard:
-        # out_round="nearest" on the guard-bit drop
-        t = _wrap16((t + (1 << (cfg.z_guard - 1))) >> cfg.z_guard, bits)
     return t
+
+
+def _guard_drop(t, cfg: FixedConfig):
+    """Requantize zfmt -> fmt (out_round="nearest" on the guard-bit drop)."""
+    if cfg.z_guard:
+        t = _wrap16((t + (1 << (cfg.z_guard - 1))) >> cfg.z_guard,
+                    cfg.fmt.total_bits)
+    return t
+
+
+def _cordic_tanh_q(zq, sched: MRSchedule, cfg: FixedConfig):
+    """Q2.14 int32-lane tanh pipeline; bit-identical to core.cordic.tanh_mr_q.
+
+    zq: int32 codes of the angle z in cfg.fmt, |z| <= 0.5. Returns int32
+    codes of tanh(z) in cfg.fmt.
+    """
+    x, y = _coshsinh_q(zq, sched, cfg)
+    return _guard_drop(_lvc_div_q(x, y, sched, cfg), cfg)
 
 
 def _cordic_sigmoid_q(xq, sched: MRSchedule, cfg: FixedConfig):

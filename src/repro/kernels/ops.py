@@ -107,6 +107,31 @@ def _silu_mul_jvp(sched, cfg, max_doublings, primals, tangents):
     return y, u * dsg * dg + sg * du
 
 
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2, 3))
+def softmax(x, axis: int = -1, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED):
+    """Fused CORDIC softmax (max-subtract + CORDIC-exp + LVC normalize).
+
+    Any rank; reduces along `axis`. -inf/-1e30 masked lanes flush to 0,
+    matching jax.nn.softmax semantics on padded attention rows.
+    """
+    from repro.kernels import softmax_cordic as SM
+
+    xm = jnp.moveaxis(x, axis, -1)
+    lead = xm.shape[:-1]
+    c = xm.shape[-1]
+    y2 = SM.softmax_2d(xm.reshape(-1, c).astype(jnp.float32),
+                       sched=sched, cfg=cfg, interpret=_use_interpret())
+    return jnp.moveaxis(y2.reshape(*lead, c).astype(x.dtype), -1, axis)
+
+
+@softmax.defjvp
+def _softmax_jvp(axis, sched, cfg, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = softmax(x, axis, sched, cfg)
+    dy = y * (dx - jnp.sum(y * dx, axis=axis, keepdims=True))
+    return y, dy
+
+
 def sigmoid_q(x_q: jax.Array, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:
     """Integer path: Q2.14 codes in (int16/int32), Q2.14 codes out.
 

@@ -25,10 +25,32 @@ from repro.models.common import P
 NEG_INF = -1e30
 
 
+def _softmax_fn(impl: str):
+    """Row-softmax selected by cfg.softmax_impl.
+
+    "exact"         — jax.nn.softmax (XLA transcendental lowering)
+    "cordic_pallas" — fused CORDIC kernel (kernels/softmax_cordic.py):
+                      max-subtract + CORDIC-exp + LVC normalize, one VMEM pass
+    "cordic_fixed"  — same Q2.14 math in plain jnp (oracle / CPU path)
+    """
+    if impl in (None, "exact"):
+        return jax.nn.softmax
+    if impl == "cordic_pallas":
+        from repro.kernels import ops as kops  # lazy: kernels optional at import
+
+        return lambda s, axis=-1: kops.softmax(s, axis)
+    if impl == "cordic_fixed":
+        from repro.cordic_engine import functions as F
+
+        return lambda s, axis=-1: F.softmax(s, axis)  # custom_jvp wrapper
+    raise ValueError(f"unknown softmax_impl {impl!r}")
+
+
 # ---------------------------------------------------------------------------
 # Chunked causal attention core (shared by GQA / MLA prefill)
 # ---------------------------------------------------------------------------
-def _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype: str = "f32"):
+def _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype: str = "f32",
+                  softmax_impl: str = "exact"):
     """q: (B,c,KH,G,D)  k/v: (B,T,KH,D)  -> (B,c,KH,G,D), full-row softmax.
 
     score_dtype="f32": cast operands to f32 (exact reference; on bf16 caches
@@ -45,7 +67,7 @@ def _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype: str = "f32"):
                        preferred_element_type=jnp.float32) * scale
     mask = (k_pos[None, :] <= q_pos[:, None])[None, None, None]  # (1,1,1,c,T)
     s = jnp.where(mask, s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    p = _softmax_fn(softmax_impl)(s, axis=-1)
     if score_dtype == "f32":
         o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v32)
     else:
@@ -55,7 +77,7 @@ def _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype: str = "f32"):
 
 
 def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
-                     score_dtype: str = "f32"):
+                     score_dtype: str = "f32", softmax_impl: str = "exact"):
     """Causal attention with query chunking.
 
     q: (B,S,KH,G,D) grouped queries; k/v: (B,T,KH,D).
@@ -72,7 +94,7 @@ def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
 
     if S <= chunk:
         q_pos = q_offset + jnp.arange(S)
-        o = _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype)
+        o = _attend_block(q, k, v, q_pos, k_pos, scale, score_dtype, softmax_impl)
         return o.astype(q.dtype)
 
     assert S % chunk == 0, (S, chunk)
@@ -81,7 +103,7 @@ def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
 
     def body(i, qc):
         q_pos = q_offset + i * chunk + jnp.arange(chunk)
-        return _attend_block(qc, k, v, q_pos, k_pos, scale, score_dtype)
+        return _attend_block(qc, k, v, q_pos, k_pos, scale, score_dtype, softmax_impl)
 
     o = jax.lax.map(lambda args: body(*args), (jnp.arange(n), qr))
     return o.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, KH, G, Dv).astype(q.dtype)
@@ -191,7 +213,8 @@ def gqa_apply(params, x, cfg, *, cache: Optional[dict] = None,
 
     qg = q.reshape(B, S, KH, G, hd)
     o = causal_attention(qg, k_full, v_full, q_offset=q_offset, k_len=k_len,
-                         chunk=cfg.attn_chunk, score_dtype=cfg.score_dtype)
+                         chunk=cfg.attn_chunk, score_dtype=cfg.score_dtype,
+                         softmax_impl=getattr(cfg, "softmax_impl", "exact"))
     o = o.reshape(B, S, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
     return y, new_cache
@@ -289,7 +312,7 @@ def mla_apply(params, x, cfg, *, cache: Optional[dict] = None,
         k_len = cache["idx"] + 1
         valid = (jnp.arange(T) < k_len)[None, None, None, :]
         s = jnp.where(valid, s, NEG_INF)
-        p = jax.nn.softmax(s, axis=-1)
+        p = _softmax_fn(getattr(cfg, "softmax_impl", "exact"))(s, axis=-1)
         if cfg.score_dtype == "f32":
             o_lat = jnp.einsum("bhst,btl->bshl", p, cc.astype(jnp.float32))
         else:
@@ -311,7 +334,8 @@ def mla_apply(params, x, cfg, *, cache: Optional[dict] = None,
         qg = q.reshape(B, S, H, 1, m.qk_nope_dim + m.qk_rope_dim)
         k_len = (cache["idx"] + S) if cache is not None else None
         o = causal_attention(qg, k, v, q_offset=offset, k_len=k_len,
-                             chunk=cfg.attn_chunk)
+                             chunk=cfg.attn_chunk,
+                             softmax_impl=getattr(cfg, "softmax_impl", "exact"))
         o = o.reshape(B, S, H, m.v_dim)
 
     y = jnp.einsum("bshv,hvd->bsd", o.astype(x.dtype), params["wo"].astype(x.dtype))

@@ -27,8 +27,13 @@ def make_prefill_step(cfg):
 
 
 def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
-    def decode(params, cache, tokens):
-        """tokens: (B,1) int32 (or (B,1,d) embeds). Returns next token ids."""
+    def decode(params, cache, tokens, rng=None):
+        """tokens: (B,1) int32 (or (B,1,d) embeds). Returns next token ids.
+
+        Sampling decode consumes `rng` — the caller threads a fresh split
+        per step (see ServeEngine.step); reusing one key would make every
+        step/batch draw the same sample.
+        """
         batch = ({"tokens": tokens} if cfg.input_mode == "tokens"
                  else {"embeds": tokens})
         logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
@@ -36,8 +41,10 @@ def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
         if greedy:
             nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
         else:
+            if rng is None:
+                raise ValueError("sampling decode requires an rng key")
             nxt = jax.random.categorical(
-                jax.random.PRNGKey(0), last / temperature).astype(jnp.int32)
+                rng, last / temperature).astype(jnp.int32)
         return nxt, cache
     return decode
 
@@ -60,15 +67,23 @@ class ServeEngine:
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None, greedy: bool = True,
+                 temperature: float = 1.0, seed: int = 0,
+                 softmax_impl: Optional[str] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
+        if softmax_impl is not None:
+            cfg = dataclasses.replace(cfg, softmax_impl=softmax_impl)
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos = eos_token
+        self.greedy = greedy
+        self.temperature = temperature
+        self._rng = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(make_decode_step(cfg))
+        self._decode = jax.jit(
+            make_decode_step(cfg, greedy=greedy, temperature=temperature))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         self._caches = [tf.init_cache(cfg, 1, max_len, jnp.float32)
@@ -77,6 +92,10 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         self._queue.append(req)
+
+    def _next_key(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
 
     def _admit(self) -> None:
         for s in range(self.slots):
@@ -88,8 +107,13 @@ class ServeEngine:
                 logits, cache = self._prefill(self.params, cache,
                                               {"tokens": toks})
                 self._caches[s] = cache
-                self._next_tok[s, 0] = int(jnp.argmax(logits[0]))
-                req.out.append(int(self._next_tok[s, 0]))
+                if self.greedy:
+                    first = int(jnp.argmax(logits[0]))
+                else:
+                    first = int(jax.random.categorical(
+                        self._next_key(), logits[0] / self.temperature))
+                self._next_tok[s, 0] = first
+                req.out.append(first)
 
     def step(self) -> int:
         """One decode step across all active slots; returns #active."""
@@ -99,8 +123,10 @@ class ServeEngine:
             return 0
         for s in active:
             req = self._active[s]
+            rng = None if self.greedy else self._next_key()
             nxt, cache = self._decode(self.params, self._caches[s],
-                                      jnp.asarray(self._next_tok[s:s + 1]))
+                                      jnp.asarray(self._next_tok[s:s + 1]),
+                                      rng)
             self._caches[s] = cache
             tok = int(nxt[0])
             req.out.append(tok)

@@ -1,0 +1,187 @@
+"""Generalized CORDIC engine: bit-identity with the paper pipeline, the
+mode x direction function library, and the activations-registry exposure."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fixed_point as fp
+from repro.core.activations import get_activation
+from repro.core import cordic as C
+from repro.cordic_engine import (
+    CIRC_ROTATION,
+    HYP_ROTATION,
+    HYP_VECTORING,
+    LIN_VECTORING,
+    CordicSchedule,
+    functions as F,
+)
+from repro.cordic_engine import core as eng
+
+f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity of the engine specialization with the paper pipeline
+# ---------------------------------------------------------------------------
+def test_engine_sigmoid_bit_identical_all_codes():
+    """Engine-specialized sigmoid == the independent kernel transcription of
+    the seed Q2.14 pipeline, over ALL 2^16 input codes (in- and out-of-domain
+    — the datapath is deterministic everywhere)."""
+    from repro.kernels import cordic_act as K
+
+    xq = jnp.arange(-(1 << 15), 1 << 15, dtype=jnp.int32)
+    via_engine = np.asarray(C.sigmoid_mr_q(xq, C.PAPER_SCHEDULE, C.PAPER_FIXED))
+    seed_transcription = np.asarray(
+        K._cordic_sigmoid_q(xq, C.PAPER_SCHEDULE, C.PAPER_FIXED))
+    np.testing.assert_array_equal(via_engine, seed_transcription)
+
+
+def test_engine_rotation_is_mr_hrc():
+    """rotate_q with the paper schedule == mr_hrc_q (cosh/sinh codes)."""
+    zq = fp.quantize(jnp.linspace(-0.5, 0.5, 4097, dtype=jnp.float32), fp.Q2_14)
+    c1, s1, _ = eng.rotate_q(zq, HYP_ROTATION, C.PAPER_FIXED)
+    c2, s2, _ = C.mr_hrc_q(zq)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_paper_schedule_bridges():
+    """MRSchedule.rotation/.division expose the generalized schedules."""
+    assert C.PAPER_SCHEDULE.rotation == HYP_ROTATION
+    assert C.PAPER_SCHEDULE.division == CordicSchedule("linear", tuple(range(1, 15)))
+    assert abs(HYP_ROTATION.x0 - C.PAPER_SCHEDULE.x0) < 1e-15
+
+
+# ---------------------------------------------------------------------------
+# Function library accuracy (fixed datapath, dyadic range reduction)
+# ---------------------------------------------------------------------------
+def test_exp_fixed_relative_error():
+    x = jnp.linspace(-10.0, 10.0, 8001, dtype=jnp.float32)
+    got = np.asarray(F.exp_fixed(x), np.float64)
+    want = np.exp(np.asarray(x, np.float64))
+    assert np.abs(got / want - 1.0).max() < 2e-3
+
+
+def test_exp_float_algorithmic_error():
+    x = jnp.linspace(-6.0, 6.0, 4001, dtype=jnp.float32)
+    got = np.asarray(F.exp_float(x), np.float64)
+    want = np.exp(np.asarray(x, np.float64))
+    assert np.abs(got / want - 1.0).max() < 1e-4
+
+
+def test_log_fixed_error():
+    x = jnp.asarray(np.geomspace(1e-3, 1e3, 4001), jnp.float32)
+    got = np.asarray(F.log_fixed(x), np.float64)
+    want = np.log(np.asarray(x, np.float64))
+    assert np.abs(got - want).max() < 2e-3
+
+
+def test_atanh_fixed_error():
+    t = jnp.linspace(-0.75, 0.75, 2001, dtype=jnp.float32)
+    got = np.asarray(F.atanh_fixed(t), np.float64)
+    want = np.arctanh(np.asarray(t, np.float64))
+    assert np.abs(got - want).max() < 1e-3
+
+
+def test_divide_fixed_full_range():
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.uniform(-100, 100, 4096), jnp.float32)
+    x = jnp.asarray(np.sign(rng.uniform(-1, 1, 4096))
+                    * np.exp(rng.uniform(np.log(1e-2), np.log(1e2), 4096)),
+                    jnp.float32)
+    got = np.asarray(F.divide_fixed(y, x), np.float64)
+    want = np.asarray(y, np.float64) / np.asarray(x, np.float64)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-9)
+    assert rel.max() < 2e-3
+
+
+def test_divide_zero_operands():
+    assert float(F.divide_fixed(f32(0.0), f32(3.0))) == 0.0
+    assert float(F.divide_fixed(f32(2.0), f32(0.0))) == 0.0
+
+
+def test_reciprocal_fixed():
+    x = jnp.asarray(np.geomspace(0.05, 50, 1001), jnp.float32)
+    got = np.asarray(F.reciprocal_fixed(x), np.float64)
+    rel = np.abs(got * np.asarray(x, np.float64) - 1.0)
+    assert rel.max() < 2e-3
+
+
+def test_sincos_fixed_error():
+    t = jnp.linspace(-8.0, 8.0, 4001, dtype=jnp.float32)
+    s, c = F.sincos_fixed(t)
+    td = np.asarray(t, np.float64)
+    assert np.abs(np.asarray(s, np.float64) - np.sin(td)).max() < 1.5e-3
+    assert np.abs(np.asarray(c, np.float64) - np.cos(td)).max() < 1.5e-3
+    # pythagorean identity survives the quadrant logic
+    assert np.abs(np.asarray(s) ** 2 + np.asarray(c) ** 2 - 1.0).max() < 3e-3
+
+
+def test_circular_rotation_gain():
+    assert abs(CIRC_ROTATION.gain - math.prod(
+        math.sqrt(1 + 4.0 ** (-j)) for j in range(14))) < 1e-12
+    assert CIRC_ROTATION.angle_range > math.pi / 4
+
+
+def test_hyp_vectoring_schedule_has_repeats():
+    js = HYP_VECTORING.r2_js
+    assert js.count(4) == 2 and js.count(13) == 2
+
+
+def test_softplus_elu_gelu_fixed_error():
+    x = jnp.linspace(-8.0, 8.0, 4001, dtype=jnp.float32)
+    xd = np.asarray(x, np.float64)
+    sp = np.asarray(F.softplus_fixed(x), np.float64)
+    assert np.abs(sp - np.logaddexp(0.0, xd)).max() < 2e-3
+    el = np.asarray(F.elu_fixed(x), np.float64)
+    want_elu = np.where(xd > 0, xd, np.expm1(xd))
+    assert np.abs(el - want_elu).max() < 1e-3
+    ge = np.asarray(F.gelu_erf_fixed(x), np.float64)
+    want_gelu = np.asarray(jax.nn.gelu(x, approximate=False), np.float64)
+    assert np.abs(ge - want_gelu).max() < 3e-3
+
+
+def test_softmax_fixed_matches_exact():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (16, 257)) * 4.0
+    got = np.asarray(F.softmax_fixed(logits))
+    want = np.asarray(jax.nn.softmax(logits))
+    assert np.abs(got - want).max() < 1e-2
+    assert np.abs(got.sum(-1) - 1.0).max() < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# Registry exposure + differentiability (acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["exp", "softplus", "elu", "gelu_erf"])
+@pytest.mark.parametrize("impl", ["exact", "cordic_float", "cordic_fixed"])
+def test_registry_exposes_engine_kinds(kind, impl):
+    act = get_activation(kind, impl)
+    x = jnp.linspace(-3.0, 3.0, 64)
+    y = act(x)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    g = jax.grad(lambda v: jnp.sum(act(v)))(x)
+    assert bool(jnp.isfinite(g).all())
+
+
+@pytest.mark.parametrize("kind,deriv", [
+    ("exp", lambda x: np.exp(x)),
+    ("softplus", lambda x: 1.0 / (1.0 + np.exp(-x))),
+    ("elu", lambda x: np.where(x > 0, 1.0, np.exp(x))),
+])
+def test_registry_jvp_matches_analytic(kind, deriv):
+    act = get_activation(kind, "cordic_fixed")
+    x = jnp.linspace(-2.0, 2.0, 41)
+    g = np.asarray(jax.vmap(jax.grad(act))(x), np.float64)
+    want = deriv(np.asarray(x, np.float64))
+    assert np.abs(g - want).max() < 5e-3
+
+
+def test_engine_kinds_jit_and_vmap():
+    act = get_activation("exp", "cordic_fixed")
+    x = jnp.linspace(-1.0, 1.0, 32).reshape(4, 8)
+    a = jax.jit(act)(x)
+    b = jax.vmap(act)(x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)

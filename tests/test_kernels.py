@@ -100,3 +100,62 @@ def test_jit_and_vmap_compose():
     a = jax.jit(ops.sigmoid)(x)
     b = jax.vmap(ops.sigmoid)(x)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# 2D kernel entry points: integer path + fused SwiGLU on non-aligned shapes
+# (exercises the _grid_and_specs sublane/lane padding directly)
+# ---------------------------------------------------------------------------
+from repro.kernels import cordic_act as KA  # noqa: E402
+from repro.kernels.ops import _use_interpret  # noqa: E402
+
+UNALIGNED_2D = [(8, 128), (5, 130), (3, 257), (100, 1000), (1, 1), (7, 100),
+                (300, 129)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.int16, jnp.int32])
+@pytest.mark.parametrize("shape", UNALIGNED_2D)
+def test_act_q_2d_bit_exact(dtype, shape):
+    """act_q_2d (Q2.14 codes end-to-end) is bit-exact vs the jnp oracle on
+    aligned and ragged tiles alike."""
+    rng = np.random.default_rng(13 + shape[0])
+    xq = jnp.asarray(rng.integers(-(1 << 14), (1 << 14) + 1, size=shape), dtype)
+    got = KA.act_q_2d(xq, interpret=_use_interpret())
+    assert got.shape == shape and got.dtype == dtype
+    want = ref.sigmoid_q_ref(xq.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got, np.int32),
+                                  np.asarray(want, np.int32))
+
+
+def test_act_q_2d_int16_roundtrip_is_lossless():
+    """Sigmoid codes lie in [0, 2^14] — int16 storage loses nothing."""
+    xq32 = jnp.asarray(
+        np.random.default_rng(3).integers(-(1 << 14), (1 << 14) + 1,
+                                          size=(16, 256)), jnp.int32)
+    got16 = KA.act_q_2d(xq32.astype(jnp.int16), interpret=_use_interpret())
+    got32 = KA.act_q_2d(xq32, interpret=_use_interpret())
+    np.testing.assert_array_equal(np.asarray(got16, np.int32),
+                                  np.asarray(got32, np.int32))
+
+
+@pytest.mark.parametrize("shape", UNALIGNED_2D)
+def test_silu_mul_2d_matches_oracle_unaligned(shape):
+    g = _rand(shape, jnp.float32, -4, 4, seed=21)
+    u = _rand(shape, jnp.float32, -2, 2, seed=22)
+    got = KA.silu_mul_2d(g, u, interpret=_use_interpret())
+    assert got.shape == shape
+    want = np.asarray(u) * np.asarray(ref.silu_ref(g))
+    np.testing.assert_allclose(np.asarray(got), want, atol=2e-5, rtol=2e-5)
+
+
+def test_silu_mul_2d_padding_region_not_leaked():
+    """Ragged tiles: the lane/sublane padding must not corrupt real outputs
+    (compare the ragged result against an aligned superset computation)."""
+    g = _rand((130, 257), jnp.float32, -4, 4, seed=31)
+    u = _rand((130, 257), jnp.float32, -2, 2, seed=32)
+    ragged = np.asarray(KA.silu_mul_2d(g, u, interpret=_use_interpret()))
+    gp = jnp.zeros((256, 384), jnp.float32).at[:130, :257].set(g)
+    up = jnp.zeros((256, 384), jnp.float32).at[:130, :257].set(u)
+    aligned = np.asarray(KA.silu_mul_2d(gp, up,
+                                        interpret=_use_interpret()))[:130, :257]
+    np.testing.assert_array_equal(ragged, aligned)

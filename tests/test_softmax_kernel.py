@@ -1,0 +1,142 @@
+"""Fused CORDIC softmax kernel: accuracy vs jax.nn.softmax, masking
+semantics, differentiability, and the attention/serve wiring."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+SHAPES = [(8, 128), (5, 130), (3, 257), (64, 1000), (1, 7), (2, 4, 96),
+          (16, 2048)]
+
+
+def _logits(shape, seed=0, scale=4.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_softmax_matches_exact(shape):
+    x = _logits(shape)
+    got = np.asarray(ops.softmax(x))
+    want = np.asarray(jax.nn.softmax(x))
+    assert np.abs(got - want).max() < 1e-2       # acceptance bound
+    assert np.abs(got - want).max() < 2e-3       # measured headroom
+    assert np.abs(got.sum(-1) - 1.0).max() < 5e-3
+
+
+def test_softmax_axis_argument():
+    x = _logits((6, 33, 5))
+    got = np.asarray(ops.softmax(x, 1))
+    want = np.asarray(jax.nn.softmax(x, axis=1))
+    assert np.abs(got - want).max() < 2e-3
+
+
+def test_softmax_masked_lanes_flush_to_zero():
+    """-1e30 masked positions (attention padding) produce exactly 0."""
+    x = _logits((4, 96), seed=2)
+    x = x.at[:, 50:].set(-1e30)
+    got = np.asarray(ops.softmax(x))
+    want = np.asarray(jax.nn.softmax(x))
+    assert (got[:, 50:] == 0.0).all()
+    assert np.abs(got - want).max() < 2e-3
+
+
+def test_softmax_fully_masked_row_uniform():
+    x = jnp.full((2, 64), -1e30, jnp.float32)
+    got = np.asarray(ops.softmax(x))
+    assert np.abs(got - 1.0 / 64).max() < 1e-3
+
+
+def test_softmax_extreme_logits():
+    """Large spread: peaked rows stay normalized, small probs underflow to 0."""
+    x = jnp.asarray([[0.0, -50.0, -10.0, 30.0] + [-1e30] * 4], jnp.float32)
+    got = np.asarray(ops.softmax(x))
+    want = np.asarray(jax.nn.softmax(x))
+    assert np.abs(got - want).max() < 2e-3
+    assert abs(got.sum() - 1.0) < 5e-3
+
+
+def test_softmax_bf16_dtype_preserved():
+    x = _logits((8, 256)).astype(jnp.bfloat16)
+    got = ops.softmax(x)
+    assert got.dtype == jnp.bfloat16
+    want = jax.nn.softmax(x.astype(jnp.float32))
+    assert np.abs(np.asarray(got, np.float32) - np.asarray(want)).max() < 8e-3
+
+
+def test_softmax_grad_matches_exact_softmax_grad():
+    x = _logits((4, 64), seed=5, scale=2.0)
+    w = jax.random.normal(jax.random.PRNGKey(9), (4, 64))
+    g = jax.grad(lambda v: jnp.sum(ops.softmax(v) * w))(x)
+    g_ref = jax.grad(lambda v: jnp.sum(jax.nn.softmax(v) * w))(x)
+    assert np.abs(np.asarray(g) - np.asarray(g_ref)).max() < 2e-2
+
+
+def test_softmax_fixed_jnp_path_grad():
+    """The cordic_fixed attention path must use the custom_jvp wrapper —
+    raw differentiation through quantize/frexp boundary ops is garbage."""
+    from repro.cordic_engine import functions as F
+
+    x = _logits((4, 16), seed=6, scale=2.0)
+    w = jax.random.normal(jax.random.PRNGKey(11), (4, 16))
+    g = jax.grad(lambda v: jnp.sum(F.softmax(v) * w))(x)
+    g_ref = jax.grad(lambda v: jnp.sum(jax.nn.softmax(v) * w))(x)
+    assert np.abs(np.asarray(g) - np.asarray(g_ref)).max() < 2e-2
+
+
+def test_softmax_jit_compose():
+    x = _logits((8, 128))
+    a = np.asarray(jax.jit(lambda v: ops.softmax(v))(x))
+    b = np.asarray(ops.softmax(x))
+    np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Attention / serve wiring
+# ---------------------------------------------------------------------------
+def test_causal_attention_with_cordic_softmax():
+    from repro.models.attention import causal_attention
+
+    B, S, KH, G, D = 1, 16, 2, 2, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, S, KH, G, D), jnp.float32)
+    k = jax.random.normal(k2, (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(k3, (B, S, KH, D), jnp.float32)
+    o_exact = causal_attention(q, k, v)
+    o_cordic = causal_attention(q, k, v, softmax_impl="cordic_pallas")
+    assert np.abs(np.asarray(o_cordic) - np.asarray(o_exact)).max() < 2e-2
+
+
+def test_model_forward_with_cordic_softmax():
+    from repro import configs
+    from repro.models import transformer as tf
+
+    cfg = configs.get_smoke("yi-9b", act_impl="exact")
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    toks = {"tokens": jnp.ones((1, 8), jnp.int32)}
+    ref, _, _ = tf.apply(params, toks, cfg)
+    for impl in ("cordic_pallas", "cordic_fixed"):
+        cfg_i = dataclasses.replace(cfg, softmax_impl=impl)
+        out, _, _ = tf.apply(params, toks, cfg_i)
+        assert np.abs(np.asarray(out) - np.asarray(ref)).max() < 5e-2, impl
+
+
+def test_serve_engine_softmax_override():
+    from repro import configs
+    from repro.models import transformer as tf
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = configs.get_smoke("yi-9b", act_impl="exact")
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=1, max_len=32,
+                      softmax_impl="cordic_pallas")
+    assert eng.cfg.softmax_impl == "cordic_pallas"
+    req = Request(rid=0, prompt=np.asarray([3, 1, 4], np.int32), max_new_tokens=4)
+    eng.submit(req)
+    while eng.step():
+        pass
+    assert len(req.out) == 4
+    assert all(0 <= t < cfg.vocab_size for t in req.out)
