@@ -11,12 +11,16 @@ division, sin/cos, softplus/elu/gelu) and the fused CORDIC softmax kernel
 are benchmarked against their XLA-transcendental references.
 
 CLI: ``python benchmarks/accuracy.py --smoke [--out BENCH_accuracy.json]``
-runs the CI smoke subset (sigmoid/tanh/exp/softmax MAE) and writes JSON.
+runs the CI smoke subset (sigmoid/tanh/exp/log-softmax/softmax MAE plus the
+Q2.14/Q2.20/Q2.29 format sweep), writes JSON, and **exits non-zero** when
+any metric regresses past its stored threshold — the accuracy gate is a
+hard CI failure, not just a record.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 import jax
@@ -25,6 +29,26 @@ import jax.numpy as jnp
 from repro.core import sigmoid as S
 from repro.core.cordic import MRSchedule
 from repro.core.errors import error_stats
+
+#: Regression gates: the BENCH_accuracy.json values this revision produces,
+#: times a 1.15 safety margin (the metrics are deterministic — fixed grids
+#: and PRNG seeds — so any drift past the margin is a real datapath change).
+THRESHOLDS = {
+    "sigmoid_mae": 6.45e-05 * 1.15,
+    "tanh_mae": 1.03e-04 * 1.15,
+    "exp_mae": 9.83e-04 * 1.15,
+    "softmax_max_abs": 3.15e-04 * 1.15,
+    "log_softmax_max_abs": 1.2e-03 * 1.15,
+    "fmt_sweep/exp_mae_q2_14": 9.83e-04 * 1.15,
+    "fmt_sweep/exp_mae_q2_20": 1.80e-05 * 1.15,
+    "fmt_sweep/exp_mae_q2_29": 6.60e-06 * 1.15,
+    "fmt_sweep/log_mae_q2_14": 1.78e-04 * 1.15,
+    "fmt_sweep/log_mae_q2_20": 3.73e-06 * 1.15,
+    "fmt_sweep/log_mae_q2_29": 3.10e-08 * 1.15,
+    "fmt_sweep/tanh_mae_q2_14": 1.02e-04 * 1.15,
+    "fmt_sweep/tanh_mae_q2_20": 2.00e-06 * 1.15,
+    "fmt_sweep/tanh_mae_q2_29": 7.00e-09 * 1.15,
+}
 
 
 def run(csv_rows: list) -> None:
@@ -99,11 +123,56 @@ def _softmax_max_err(rows: int = 64, cols: int = 512) -> float:
     return float(np.abs(got - want).max())
 
 
-def smoke(out_path: str) -> dict:
-    """CI smoke subset: MAE for sigmoid/tanh/exp + softmax max-abs error.
+def _log_softmax_max_err(rows: int = 64, cols: int = 512) -> float:
+    from repro.kernels import ops as kops
+
+    logits = jax.random.normal(jax.random.PRNGKey(1), (rows, cols)) * 4.0
+    got = np.asarray(kops.log_softmax(logits), np.float64)
+    want = np.asarray(jax.nn.log_softmax(logits), np.float64)
+    return float(np.abs(got - want).max())
+
+
+def format_sweep() -> dict:
+    """MAE of exp/log/tanh at each Q2.14/Q2.20/Q2.29 format profile —
+    the ROADMAP's wider-format accuracy study, recorded per revision."""
+    from repro.cordic_engine import functions as F
+
+    res = {}
+    for name, p in F.FORMAT_PROFILES.items():
+        x = jnp.linspace(-4.0, 4.0, 4001, dtype=jnp.float32)
+        res[f"fmt_sweep/exp_mae_{name}"] = float(np.abs(
+            np.asarray(F.exp_fixed(x, sched=p.rotation, cfg=p.cfg), np.float64)
+            - np.exp(np.asarray(x, np.float64))).mean())
+        xl = jnp.asarray(np.geomspace(0.1, 10.0, 4001), jnp.float32)
+        res[f"fmt_sweep/log_mae_{name}"] = float(np.abs(
+            np.asarray(F.log_fixed(xl, sched=p.vectoring, cfg=p.cfg), np.float64)
+            - np.log(np.asarray(xl, np.float64))).mean())
+        z = jnp.linspace(-0.5, 0.5, 4001, dtype=jnp.float32)
+        res[f"fmt_sweep/tanh_mae_{name}"] = float(np.abs(
+            np.asarray(S.tanh_cordic_fixed(z, p.pipeline, p.cfg), np.float64)
+            - np.tanh(np.asarray(z, np.float64))).mean())
+    return res
+
+
+def check_thresholds(res: dict) -> list:
+    """Returns [(metric, value, threshold)] for every regressed metric.
+
+    A THRESHOLDS key missing from the results is itself a failure — a
+    renamed/removed metric must not silently disable its gate."""
+    bad = [(k, res[k], THRESHOLDS[k])
+           for k in sorted(THRESHOLDS) if k in res and res[k] > THRESHOLDS[k]]
+    bad += [(k, float("nan"), THRESHOLDS[k])
+            for k in sorted(THRESHOLDS) if k not in res]
+    return bad
+
+
+def smoke(out_path: str, check: bool = True) -> dict:
+    """CI smoke subset: MAE for sigmoid/tanh/exp, softmax/log-softmax
+    max-abs, and the wider-format sweep.
 
     Written as JSON so the CI run leaves a machine-readable accuracy record
-    (BENCH_accuracy.json) next to the logs.
+    (BENCH_accuracy.json) next to the logs. With ``check`` (the default)
+    any metric above its stored threshold aborts with a non-zero exit.
     """
     from repro.cordic_engine import functions as F
 
@@ -114,14 +183,18 @@ def smoke(out_path: str) -> dict:
                                 S.tanh_exact, -0.5, 0.5)["mae"],
         "exp_mae": error_stats(jax.jit(F.exp_fixed), jnp.exp, -4, 4)["mae"],
         "softmax_max_abs": _softmax_max_err(),
+        "log_softmax_max_abs": _log_softmax_max_err(),
     }
-    # hard gates: same bounds the test suite enforces
-    assert res["sigmoid_mae"] < 1e-3, res
-    assert res["tanh_mae"] < 1e-3, res
-    assert res["exp_mae"] < 5e-2, res
-    assert res["softmax_max_abs"] < 1e-2, res
+    res.update(format_sweep())
     with open(out_path, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
+    if check:
+        bad = check_thresholds(res)
+        if bad:
+            for name, value, limit in bad:
+                print(f"ACCURACY REGRESSION: {name} = {value:.6g} "
+                      f"> threshold {limit:.6g}", file=sys.stderr)
+            raise SystemExit(1)
     return res
 
 
@@ -129,10 +202,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="run the CI smoke subset and write JSON")
+    ap.add_argument("--no-check", action="store_true",
+                    help="record only; skip the regression-threshold gate")
     ap.add_argument("--out", default="BENCH_accuracy.json")
     args = ap.parse_args()
     if args.smoke:
-        print(json.dumps(smoke(args.out), indent=2, sort_keys=True))
+        print(json.dumps(smoke(args.out, check=not args.no_check),
+                         indent=2, sort_keys=True))
     else:
         rows: list = []
         run(rows)

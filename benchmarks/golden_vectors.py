@@ -1,0 +1,85 @@
+"""Generate the golden-vector conformance set for the Q2.14 integer datapath.
+
+Writes one ``.npz`` per function into ``tests/golden/``, each holding the
+*exhaustive* input-code -> output-code map of the bit-accurate pipeline:
+
+    sigmoid  all 2^16 Q2.14 codes -> sigmoid_mr_q codes (paper pipeline)
+    tanh     all 2^16 Q2.14 codes -> tanh_mr_q codes
+    exp      all 2^16 angle codes -> cosh+sinh codes of the MR-HRC rotation
+             (the e^r core of exp/softmax; deterministic out-of-domain too)
+    log      mantissa codes m in [0.5, 1) -> hyperbolic-vectoring
+             2*atanh((m-1)/(m+1)) accumulator codes (the log leg)
+
+The files are checked in; tests/test_golden_vectors.py asserts that both
+the jnp engine path and the Pallas kernel path reproduce them bit-exactly,
+so a refactor of the iteration core cannot silently drift from the paper's
+published 4.23e-4 MAE behavior. Regenerate (only after an *intentional*
+datapath change) with:
+
+    PYTHONPATH=src python benchmarks/golden_vectors.py
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import cordic as C
+from repro.core import fixed_point as fp
+from repro.cordic_engine import core as eng
+from repro.cordic_engine.schedule import HYP_ROTATION, HYP_VECTORING
+
+#: mantissa code range for the log leg: m = code * 2^-14 in [0.5, 1).
+LOG_M_LO, LOG_M_HI = 1 << 13, 1 << 14
+ONE_Q = 1 << 14
+
+
+def generate() -> dict:
+    """Returns {name: (out_codes int16 array, meta dict)}."""
+    all_codes = jnp.arange(-(1 << 15), 1 << 15, dtype=jnp.int32)
+    cfg = C.PAPER_FIXED
+
+    sig = np.asarray(C.sigmoid_mr_q(all_codes, C.PAPER_SCHEDULE, cfg), np.int16)
+    tah = np.asarray(C.tanh_mr_q(all_codes, C.PAPER_SCHEDULE, cfg), np.int16)
+
+    c, s, _ = eng.rotate_q(all_codes, HYP_ROTATION, cfg)
+    ex = np.asarray(fp.add(c, s, cfg.fmt), np.int16)    # e^r codes
+
+    mq = jnp.arange(LOG_M_LO, LOG_M_HI, dtype=jnp.int32)
+    # (x0, y0) = (m+1, m-1): exact dyadic offsets, both inside Q2.14
+    lg = np.asarray(eng.vector_q(mq + ONE_Q, mq - ONE_Q, HYP_VECTORING, cfg),
+                    np.int16)
+
+    fmt = str(cfg.fmt)
+    return {
+        "sigmoid": (sig, dict(fmt=fmt, domain="all 2^16 codes",
+                              pipeline="sigmoid_mr_q(PAPER_SCHEDULE)")),
+        "tanh": (tah, dict(fmt=fmt, domain="all 2^16 codes",
+                           pipeline="tanh_mr_q(PAPER_SCHEDULE)")),
+        "exp": (ex, dict(fmt=fmt, domain="all 2^16 angle codes",
+                         pipeline="cosh+sinh of rotate_q(HYP_ROTATION)")),
+        "log": (lg, dict(fmt=fmt, domain=f"mantissa codes [{LOG_M_LO},{LOG_M_HI})",
+                         pipeline="vector_q(m+1, m-1, HYP_VECTORING)")),
+    }
+
+
+def write(out_dir: str) -> None:
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    for name, (codes, meta) in generate().items():
+        path = out / f"{name}_q2_14.npz"
+        np.savez_compressed(path, y=codes,
+                            meta=np.bytes_(json.dumps(meta, sort_keys=True)))
+        print(f"wrote {path} ({codes.size} codes, "
+              f"{path.stat().st_size / 1024:.0f} KiB)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(pathlib.Path(__file__).parent.parent
+                                         / "tests" / "golden"))
+    args = ap.parse_args()
+    write(args.out)

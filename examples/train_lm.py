@@ -27,12 +27,21 @@ from repro.optim import adamw
 from repro.train import step as step_lib
 
 
-def build_cfg(act_impl: str) -> ModelConfig:
+def build_cfg(act_impl: str, loss_impl: str = "exact",
+              small: bool = False) -> ModelConfig:
+    if small:
+        # CI/acceptance config: ~20-step CPU runs through the CORDIC loss
+        return ModelConfig(
+            name="train-demo-small", family="dense",
+            num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+            d_ff=512, vocab_size=2048, act_impl=act_impl,
+            loss_impl=loss_impl, rope_theta=1e4, dtype="float32",
+        )
     return ModelConfig(
         name="train-demo-100m", family="dense",
         num_layers=16, d_model=512, num_heads=8, num_kv_heads=4,
         d_ff=2048, vocab_size=32768, act_impl=act_impl,
-        rope_theta=1e4, dtype="float32",
+        loss_impl=loss_impl, rope_theta=1e4, dtype="float32",
     )
 
 
@@ -44,16 +53,21 @@ def main():
                          "so structure is learnable within a CPU-budget run")
     ap.add_argument("--act", default="cordic_fixed",
                     choices=["exact", "cordic_float", "cordic_fixed", "cordic_pallas"])
+    ap.add_argument("--loss", default="exact",
+                    choices=["exact", "cordic", "cordic_pallas"],
+                    help="cross-entropy log-softmax datapath (cfg.loss_impl)")
+    ap.add_argument("--small", action="store_true",
+                    help="2-layer/128-wide config for quick CPU parity runs")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--accum", type=int, default=2)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 
-    cfg = build_cfg(args.act)
+    cfg = build_cfg(args.act, args.loss, small=args.small)
     n_params = cfg.param_counts()["total"]
     print(f"[train_lm] model {cfg.name}: {n_params / 1e6:.1f}M params, "
-          f"act_impl={cfg.act_impl}")
+          f"act_impl={cfg.act_impl}, loss_impl={cfg.loss_impl}")
 
     data_cfg = DataConfig(vocab_size=args.data_vocab, seq_len=args.seq,
                           global_batch=args.batch, seed=42)

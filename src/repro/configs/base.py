@@ -75,6 +75,12 @@ class ModelConfig:
     softmax_impl: str = "exact"          # exact | cordic_fixed | cordic_pallas:
                                          # attention-row softmax via the fused
                                          # CORDIC-exp + LVC-normalize kernel
+    loss_impl: str = "exact"             # exact | cordic | cordic_pallas:
+                                         # cross-entropy log-softmax via the
+                                         # CORDIC exp + hyperbolic-vectoring
+                                         # log legs (train/losses.py); the
+                                         # backward pass is always the
+                                         # analytic softmax - onehot form
     attn_chunk: int = 1024
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None

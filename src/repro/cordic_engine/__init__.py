@@ -5,14 +5,49 @@ The paper's MR-HRC sigmoid pipeline is one point in a
 machinery so every point is reachable:
 
     schedule.py  — CordicSchedule (circular/linear/hyperbolic, mixed radix,
-                   repeats) + the paper's bundled MRSchedule
-    core.py      — the unified iteration engine, float + bit-accurate Q2.14
+                   repeats) + the paper's bundled MRSchedule + format-sized
+                   variants (``*_for(frac_bits)``) for the Q2.20/Q2.29 study
+    core.py      — the unified iteration engine, float + bit-accurate fixed
+                   point (Q2.14 default; wider formats via FORMAT_PROFILES)
     functions.py — exp, log, atanh, divide, reciprocal, sin/cos, softplus,
-                   elu, erf, gelu — each with dyadic range reduction
+                   elu, erf, gelu, softmax, log_softmax — each with dyadic
+                   range reduction
 
 ``repro.core.cordic`` re-exports the paper specialization (bit-identical to
-the seed implementation); ``repro.kernels.softmax_cordic`` fuses the exp +
-linear-vectoring legs into one Pallas softmax kernel.
+the seed implementation); ``repro.kernels`` compiles the same datapaths as
+Pallas kernels, enforced bit-exact by tests/test_golden_vectors.py.
+
+Selection matrix — how model configs reach the engine
+-----------------------------------------------------
+
+Every nonlinearity in the LM substrate is config-selectable between the
+XLA transcendental reference and the CORDIC datapaths:
+
+=================  =======================  ===================================
+config knob        values                   what it switches
+=================  =======================  ===================================
+``act_impl``       ``exact``                jax.nn / jnp lowering
+(ModelConfig /     ``cordic_float``         CORDIC algorithm in f32
+``get_activation`` ``cordic_fixed``         bit-accurate Q2.14, pure jnp int32
+ impl arg)         ``cordic_pallas``        Pallas kernels (sigmoid/tanh/silu
+                                            + dedicated exp/softplus/elu/
+                                            gelu_erf/log kernels)
+``softmax_impl``   ``exact``                jax.nn.softmax attention rows
+                   ``cordic_fixed``         functions.softmax (jnp fixed)
+                   ``cordic_pallas``        fused softmax kernel (CORDIC-exp
+                                            + R2-LVC normalize, one VMEM pass)
+``loss_impl``      ``exact``                jax.nn.log_softmax cross entropy
+                   ``cordic``               functions.log_softmax (CORDIC exp
+                                            + hyperbolic-vectoring log)
+                   ``cordic_pallas``        fused log-softmax kernel
+=================  =======================  ===================================
+
+All three CORDIC loss/softmax paths differentiate through output-derived
+rules: activations via custom_jvp from the primal, the cross-entropy loss
+via a custom_vjp whose backward is the analytic softmax-minus-onehot form
+(repro.train.losses) — so training stability matches the exact baseline.
+Wider-format evaluation (accuracy ladder) goes through
+``functions.FORMAT_PROFILES["q2_14" | "q2_20" | "q2_29"]``.
 """
 from repro.cordic_engine.schedule import (  # noqa: F401
     CIRC_ROTATION,
@@ -28,6 +63,10 @@ from repro.cordic_engine.schedule import (  # noqa: F401
     ROTATION,
     VECTORING,
     CordicSchedule,
+    hyp_rotation_for,
+    hyp_vectoring_for,
+    lin_vectoring_for,
+    mr_schedule_for,
 )
 from repro.cordic_engine.core import (  # noqa: F401
     FixedConfig,

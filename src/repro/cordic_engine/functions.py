@@ -32,6 +32,7 @@ the raw forwards here are deliberately jvp-free so callers can pick.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 
@@ -48,6 +49,11 @@ from repro.cordic_engine.schedule import (
     HYP_VECTORING,
     LIN_VECTORING,
     CordicSchedule,
+    MRSchedule,
+    hyp_rotation_for,
+    hyp_vectoring_for,
+    lin_vectoring_for,
+    mr_schedule_for,
 )
 
 _LN2 = 0.6931471805599453
@@ -55,6 +61,42 @@ _HALF_PI = math.pi / 2.0
 #: exp clamp: keeps 2^k inside normal f32 exponent range.
 _EXP_CLIP = 80.0
 _ERF_A = 0.147
+
+
+# --------------------------------------------------------------------------
+# Format profiles: a datapath format bundled with schedules sized to its
+# resolution (the Q2.20/Q2.29 accuracy-study configurations)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FormatProfile:
+    """Everything needed to run the function library at one Q format:
+    the FixedConfig plus rotation/vectoring/division schedules whose
+    iteration depth matches the format's fraction bits."""
+
+    name: str
+    cfg: FixedConfig
+    rotation: CordicSchedule       # exp / cosh+sinh
+    vectoring: CordicSchedule      # atanh / log
+    division: CordicSchedule       # divide / reciprocal
+    pipeline: MRSchedule           # bundled sigmoid/tanh schedule
+
+    @classmethod
+    def for_format(cls, name: str, fmt: fp.QFormat) -> "FormatProfile":
+        fb = fmt.frac_bits
+        return cls(name=name, cfg=FixedConfig(fmt=fmt),
+                   rotation=hyp_rotation_for(fb),
+                   vectoring=hyp_vectoring_for(fb),
+                   division=lin_vectoring_for(fb),
+                   pipeline=mr_schedule_for(fb))
+
+
+#: The accuracy-study ladder: the paper's 16-bit format and two wider
+#: internal formats (schedule depth grows with the fraction bits).
+FORMAT_PROFILES = {
+    "q2_14": FormatProfile.for_format("q2_14", fp.Q2_14),
+    "q2_20": FormatProfile.for_format("q2_20", fp.Q2_20),
+    "q2_29": FormatProfile.for_format("q2_29", fp.Q2_29),
+}
 
 
 def _f32(x):
@@ -332,3 +374,52 @@ def _softmax_jvp(axis, primals, tangents):
     (x,), (dx,) = primals, tangents
     y = softmax(x, axis)
     return y, y * (dx - jnp.sum(y * dx, axis=axis, keepdims=True))
+
+
+# --------------------------------------------------------------------------
+# log-softmax (CORDIC exp for the sum + hyperbolic-vectoring log leg) —
+# jnp reference for the fused Pallas kernel in repro.kernels.softmax_cordic
+# and the datapath behind the cfg.loss_impl="cordic" training loss.
+# --------------------------------------------------------------------------
+def log_softmax_fixed(x, axis: int = -1, cfg: FixedConfig = PAPER_FIXED):
+    """log-softmax along `axis`: max-subtract, CORDIC exp, CORDIC log.
+
+        u_i = x_i - max(x)
+        y_i = u_i - ln(sum_j e^{u_j})
+
+    The sum's log runs through the engine's hyperbolic-vectoring leg
+    (ln S = 2 atanh((m-1)/(m+1)) + p ln2 on the frexp mantissa) — the same
+    shift-add core as atanh, no transcendental. The subtraction u_i - ln S
+    is a float boundary op, exactly like the dyadic 2^k scaling in exp.
+
+    Raw forward — use ``log_softmax`` below for a differentiable wrapper.
+    """
+    x = _f32(x)
+    u = x - jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = exp_fixed(u, cfg=cfg)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return u - log_fixed(s, cfg=cfg)
+
+
+def log_softmax_float(x, axis: int = -1):
+    """Float-datapath CORDIC log-softmax (algorithmic error only)."""
+    x = _f32(x)
+    u = x - jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = exp_float(u)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return u - log_float(s)
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def log_softmax(x, axis: int = -1):
+    """Differentiable CORDIC log-softmax (jnp fixed path): the analytic
+    tangent dy = dx - p * sum(dx) with p = exp(y) from the primal output."""
+    return log_softmax_fixed(x, axis=axis)
+
+
+@log_softmax.defjvp
+def _log_softmax_jvp(axis, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = log_softmax(x, axis)
+    p = jnp.exp(y)
+    return y, dx - jnp.sum(p * dx, axis=axis, keepdims=True)

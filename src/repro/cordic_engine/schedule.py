@@ -131,6 +131,35 @@ CIRC_ROTATION = CordicSchedule(CIRCULAR, tuple(range(0, 14)))
 
 
 # --------------------------------------------------------------------------
+# Format-sized schedules (Q2.20 / Q2.29 accuracy studies)
+# --------------------------------------------------------------------------
+def hyp_rotation_for(frac_bits: int) -> CordicSchedule:
+    """Paper-style mixed-radix rotation sized to a frac_bits datapath:
+    the fixed R2 prologue j=2..9 (residual ~6.1e-3, inside the R4 admissible
+    range) and an R4 tail extended until the smallest elementary angle
+    reaches the format resolution (j up to ceil(frac_bits/2))."""
+    return CordicSchedule(HYPERBOLIC, tuple(range(2, 10)),
+                          tuple(range(4, (frac_bits + 1) // 2 + 1)))
+
+
+def hyp_vectoring_for(frac_bits: int) -> CordicSchedule:
+    """Hyperbolic vectoring j=1..frac_bits with the textbook repeats."""
+    return CordicSchedule(HYPERBOLIC, _hyp_vectoring_js(1, frac_bits))
+
+
+def lin_vectoring_for(frac_bits: int) -> CordicSchedule:
+    """Linear vectoring to 2^-frac_bits (one digit per fraction bit)."""
+    return CordicSchedule(LINEAR, tuple(range(1, frac_bits + 1)))
+
+
+def mr_schedule_for(frac_bits: int) -> MRSchedule:
+    """The bundled sigmoid/tanh pipeline schedule sized to frac_bits."""
+    return MRSchedule(r2_js=tuple(range(2, 10)),
+                      r4_js=tuple(range(4, (frac_bits + 1) // 2 + 1)),
+                      lvc_js=tuple(range(1, frac_bits + 1)))
+
+
+# --------------------------------------------------------------------------
 # The paper's bundled pipeline schedule (moved verbatim from core/cordic.py)
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

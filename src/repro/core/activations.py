@@ -124,13 +124,21 @@ def _with_output_jvp(fwd: Callable, tangent_from_primal: Callable) -> Callable:
 def _engine_fwd(kind: str, impl: str, cfg: FixedConfig):
     """Forward fn for the engine-derived kinds (exp/softplus/elu/gelu_erf).
 
-    ``cordic_pallas`` maps to the fixed jnp path for these kinds — they have
-    no dedicated kernel yet (the fused softmax kernel covers the hot exp
-    path); the datapath math is identical either way.
+    ``cordic_pallas`` runs the dedicated Pallas kernels in
+    ``repro.kernels.ops`` — bit-identical to the jnp fixed path (enforced by
+    the golden-vector conformance suite), but fused into one VMEM pass.
     """
     from repro.cordic_engine import functions as F
 
-    fixed = impl in ("cordic_fixed", "cordic_pallas")
+    if impl == "cordic_pallas":
+        from repro.core.cordic import PAPER_SCHEDULE
+        from repro.kernels import ops as kops  # lazy: kernels optional at import
+
+        ktable = {"exp": kops.exp, "softplus": kops.softplus,
+                  "elu": kops.elu, "gelu_erf": kops.gelu_erf}
+        # bind cfg positionally (custom_jvp nondiff args) so non-default
+        # formats are honored like the jnp paths
+        return lambda x, _k=ktable[kind]: _k(x, PAPER_SCHEDULE, cfg)
     table = {
         "exp": (jnp.exp, F.exp_float, lambda x: F.exp_fixed(x, cfg=cfg)),
         "softplus": (jax.nn.softplus, F.softplus_float,
@@ -142,7 +150,7 @@ def _engine_fwd(kind: str, impl: str, cfg: FixedConfig):
     exact, flt, fxd = table[kind]
     if impl == "exact":
         return exact
-    return fxd if fixed else flt
+    return fxd if impl == "cordic_fixed" else flt
 
 
 #: tangent coefficients from (x, primal) for the engine-derived kinds.
@@ -177,7 +185,11 @@ def get_activation(kind: str, impl: str = "exact", range_mode: str = "reduce",
 
     if kind in _ENGINE_JVPS:
         fwd = _engine_fwd(kind, impl, cfg)
-        return fwd if impl == "exact" else _with_output_jvp(fwd, _ENGINE_JVPS[kind])
+        if impl in ("exact", "cordic_pallas"):
+            # exact is jax-native; the pallas ops carry their own custom_jvp
+            # with the same output-derived rules — don't wrap twice
+            return fwd
+        return _with_output_jvp(fwd, _ENGINE_JVPS[kind])
 
     if kind == "sigmoid":
         fwd = _sigmoid_fwd(impl, range_mode, sched, cfg)

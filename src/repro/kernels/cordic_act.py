@@ -17,6 +17,13 @@ Fused variants (`silu`, `silu_mul`) keep the elementwise epilogue of SwiGLU
 MLPs inside the same VMEM tile, saving an HBM round-trip per activation —
 this is the framework-level payoff of having the activation as a kernel.
 
+Beyond the sigmoid/tanh family the same tile runs the generalized-engine
+function kinds (`exp`, `log`, `softplus`, `elu`, `gelu_erf`): hyperbolic
+rotation for e^r, hyperbolic vectoring for the atanh-based log, with dyadic
+range reduction and the 2^k scale as an exponent-field bitcast. Each is
+bit-identical to its jnp fixed-path twin in cordic_engine.functions, which
+the golden-vector conformance suite enforces per backend.
+
 Validated bit-exactly against kernels/ref.py (the pure-jnp Q2.14 oracle) in
 interpret mode; compiled path is exercised by the dry-run on the TPU target.
 """
@@ -32,12 +39,22 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.cordic import FixedConfig, MRSchedule, PAPER_FIXED, PAPER_SCHEDULE
+from repro.cordic_engine.schedule import HYP_VECTORING, hyp_vectoring_for
 
 # ---------------------------------------------------------------------------
 # In-kernel fixed-point pipeline (explicit, Mosaic-friendly ops only)
 # ---------------------------------------------------------------------------
 
 _I32 = jnp.int32
+_LN2 = np.float32(math.log(2.0))
+_INV_LN2 = np.float32(1.0 / math.log(2.0))
+#: exp clamp: keeps 2^k inside normal f32 exponent range (== functions._EXP_CLIP).
+_EXP_CLIP = np.float32(80.0)
+_ERF_A = np.float32(0.147)
+#: hyperbolic-vectoring schedule for the in-kernel log leg (j=1..14 with the
+#: textbook convergence repeats) — the same iteration list the jnp fixed path
+#: uses, so the kernels stay bit-identical to cordic_engine.functions.
+_HYP_VEC_JS = HYP_VECTORING.r2_js
 
 
 def _wrap16(v, bits: int):
@@ -157,16 +174,102 @@ def _cordic_sigmoid_q(xq, sched: MRSchedule, cfg: FixedConfig):
     return _wrap16(half + t2, bits)
 
 
-def _quantize_f(xf, fb: int):
+def _quantize_f(xf, fb: int, bits: int = 16):
     """float32 -> Q codes, round-to-nearest, saturating (boundary op)."""
     scaled = xf * np.float32(1 << fb)
     q = jnp.round(scaled).astype(_I32)
-    lim = (1 << 15) - 1
+    lim = (1 << (bits - 1)) - 1
     return jnp.clip(q, -lim - 1, lim)
 
 
 def _dequantize_f(q, fb: int):
     return q.astype(jnp.float32) * np.float32(1.0 / (1 << fb))
+
+
+def _exp2_i32(k):
+    """2^k for int32 k in [-126, 127] via the f32 exponent field (no exp2)."""
+    return jax.lax.bitcast_convert_type(((k + 127) << 23).astype(jnp.int32),
+                                        jnp.float32)
+
+
+def _frexp_f(v):
+    """(m, p) with v = m * 2^p, m in [0.5, 1) — exponent-field frexp.
+
+    Valid for positive normal f32 (callers floor at 1e-30 >> FLT_MIN).
+    Matches jnp.frexp bit-for-bit on that domain, including exact powers
+    of two (1.0 -> (0.5, 1)).
+    """
+    e = (jax.lax.bitcast_convert_type(v, jnp.int32) >> 23) - 127
+    m = v * _exp2_i32(-e) * np.float32(0.5)            # [1,2) -> [0.5,1), exact
+    return m, e + 1
+
+
+def _hyp_vector_q(x, y, cfg: FixedConfig, js=_HYP_VEC_JS):
+    """Radix-2 hyperbolic vectoring: drives y -> 0, returns atanh(y0/x0)
+    codes in cfg.zfmt. Bit-identical to cordic_engine.core.vector_q with the
+    HYP_VECTORING schedule (same shift order, same where/add/sub structure).
+    """
+    bits = cfg.fmt.total_bits
+    zbits = cfg.zfmt.total_bits
+    zfb = cfg.zfmt.frac_bits
+    z = jnp.zeros_like(y)
+    for j in js:
+        a = _I32(int(round(math.atanh(2.0 ** -j) * (1 << zfb))))
+        plus = y < 0                                   # e = +1 branch
+        xs = _shr(x, j, bits)
+        ys = _shr(y, j, bits)
+        x_n = jnp.where(plus, _wrap16(x + ys, bits), _wrap16(x - ys, bits))
+        y_n = jnp.where(plus, _wrap16(y + xs, bits), _wrap16(y - xs, bits))
+        z = jnp.where(plus, _wrap16(z - a, zbits), _wrap16(z + a, zbits))
+        x, y = x_n, y_n
+    return z
+
+
+def _exp_q(xf, sched: MRSchedule, cfg: FixedConfig):
+    """e^x over (-80, 80): dyadic reduction + Q2.14 cosh+sinh rotation.
+
+    Bit-identical to cordic_engine.functions.exp_fixed (the 2^k scale is an
+    exponent-field bitcast of the same exact power of two jnp.exp2 yields).
+    """
+    fb = cfg.fmt.frac_bits
+    bits = cfg.fmt.total_bits
+    x = jnp.clip(xf, -_EXP_CLIP, _EXP_CLIP)
+    k = jnp.round(x * _INV_LN2)
+    r = x - k * _LN2                                   # |r| <= ln2/2 < 0.35
+    c, s = _coshsinh_q(_quantize_f(r, fb, bits), sched, cfg)
+    eq = _wrap16(c + s, bits)                          # e^r in (0.70, 1.42)
+    return _dequantize_f(eq, fb) * _exp2_i32(k.astype(_I32))
+
+
+def _log_q(v, cfg: FixedConfig):
+    """ln v for v > 0: exponent-field mantissa split + atanh identity.
+
+    Bit-identical to cordic_engine.functions.log_fixed: the vectoring runs
+    on (m+1, m-1) with m in [0.5, 1) — both inside the Q format, no
+    division. The vectoring depth is sized to the format's fraction bits
+    (j=1..14 with repeats for Q2.14, deeper for the wider profiles).
+    """
+    fb = cfg.fmt.frac_bits
+    bits = cfg.fmt.total_bits
+    zfb = cfg.zfmt.frac_bits
+    js = _HYP_VEC_JS if fb == 14 else hyp_vectoring_for(fb).r2_js
+    v = jnp.maximum(v, np.float32(1e-30))
+    m, p = _frexp_f(v)
+    num = _quantize_f(m - 1.0, fb, bits)               # in [-0.5, 0)
+    den = _quantize_f(m + 1.0, fb, bits)               # in [1.5, 2)
+    at = _dequantize_f(_hyp_vector_q(den, num, cfg, js), zfb)
+    return 2.0 * at + p.astype(jnp.float32) * _LN2
+
+
+def _erf_q(u, sched: MRSchedule, cfg: FixedConfig):
+    """Exponential erf approximation with the CORDIC exp core (|err|<2.5e-4).
+
+    The rational prefactor and sqrt are float boundary ops, mirroring
+    cordic_engine.functions._erf_from_exp op-for-op.
+    """
+    u2 = u * u
+    g = u2 * (np.float32(4.0 / math.pi) + _ERF_A * u2) / (1.0 + _ERF_A * u2)
+    return jnp.sign(u) * jnp.sqrt(jnp.maximum(1.0 - _exp_q(-g, sched, cfg), 0.0))
 
 
 def _wide_sigmoid_f(xf, sched: MRSchedule, cfg: FixedConfig, max_doublings: int):
@@ -178,8 +281,9 @@ def _wide_sigmoid_f(xf, sched: MRSchedule, cfg: FixedConfig, max_doublings: int)
         k = k + (ax > np.float32(2.0 ** i)).astype(_I32)
     scale = jnp.exp2(-k.astype(jnp.float32))
     xs = jnp.clip(xf * scale, -1.0, 1.0)
-    s = _dequantize_f(_cordic_sigmoid_q(_quantize_f(xs, cfg.fmt.frac_bits), sched, cfg),
-                      cfg.fmt.frac_bits)
+    s = _dequantize_f(_cordic_sigmoid_q(
+        _quantize_f(xs, cfg.fmt.frac_bits, cfg.fmt.total_bits), sched, cfg),
+        cfg.fmt.frac_bits)
     for i in range(max_doublings):
         s2 = s * s
         denom = s2 + (1.0 - s) * (1.0 - s)
@@ -196,16 +300,31 @@ def _act_kernel(x_ref, o_ref, *, op: str, sched: MRSchedule, cfg: FixedConfig,
     xf = x_ref[...].astype(jnp.float32)
     fb = cfg.fmt.frac_bits
     if op == "sigmoid":
-        xq = _quantize_f(jnp.clip(xf, -1.0, 1.0), fb)
+        xq = _quantize_f(jnp.clip(xf, -1.0, 1.0), fb, cfg.fmt.total_bits)
         out = _dequantize_f(_cordic_sigmoid_q(xq, sched, cfg), fb)
     elif op == "tanh":
         # tanh(z), |z| <= 0.5 clamp: direct angle feed (no halving round trip)
-        zq = _quantize_f(jnp.clip(xf, -0.5, 0.5), fb)
+        zq = _quantize_f(jnp.clip(xf, -0.5, 0.5), fb, cfg.fmt.total_bits)
         out = _dequantize_f(_cordic_tanh_q(zq, sched, cfg), fb)
     elif op == "sigmoid_wide":
         out = _wide_sigmoid_f(xf, sched, cfg, max_doublings)
     elif op == "silu":
         out = xf * _wide_sigmoid_f(xf, sched, cfg, max_doublings)
+    elif op == "exp":
+        out = _exp_q(xf, sched, cfg)
+    elif op == "log":
+        out = _log_q(xf, cfg)
+    elif op == "softplus":
+        # log(1 + e^x) = relu(x) + log(1 + e^-|x|) — both CORDIC legs
+        e = _exp_q(-jnp.abs(xf), sched, cfg)
+        out = jnp.maximum(xf, 0.0) + _log_q(1.0 + e, cfg)
+    elif op == "elu":
+        em1 = _exp_q(jnp.minimum(xf, 0.0), sched, cfg) - 1.0
+        out = jnp.where(xf > 0, xf, em1)
+    elif op == "gelu_erf":
+        # exact-form GELU 0.5 x (1 + erf(x/sqrt2)) with CORDIC-exp erf
+        out = 0.5 * xf * (1.0 + _erf_q(xf * np.float32(1.0 / math.sqrt(2.0)),
+                                       sched, cfg))
     else:
         raise ValueError(op)
     o_ref[...] = out.astype(o_ref.dtype)

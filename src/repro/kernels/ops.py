@@ -67,6 +67,21 @@ sigmoid_wide = _make_unary("sigmoid_wide", lambda x, s: s * (1.0 - s))
 #: tanh with the paper's |z|<=0.5 clamp contract.
 tanh = _make_unary("tanh", lambda x, t: 1.0 - t * t)
 
+# Engine-derived function kinds, each a dedicated kernel bit-identical to its
+# jnp fixed-path twin in cordic_engine.functions; tangent coefficients come
+# from the primal output (exp' = y; softplus' = sigma = 1 - e^-y;
+# elu' = y + alpha = alpha e^x on the negative branch).
+exp = _make_unary("exp", lambda x, y: y)
+# log's forward floors x at 1e-30, so the primal is constant (flat) for
+# x <= 0 — the tangent must be 0 there, not 1/clamp.
+log = _make_unary("log", lambda x, y: jnp.where(x > 1e-30, 1.0 / x, 0.0))
+softplus = _make_unary("softplus", lambda x, y: -jnp.expm1(-y))
+elu = _make_unary("elu", lambda x, y: jnp.where(x > 0, 1.0, y + 1.0))
+#: gelu'(x) = Phi(x) + x phi(x) — cheap closed form, exact to first order.
+gelu_erf = _make_unary(
+    "gelu_erf",
+    lambda x, y: jax.scipy.stats.norm.cdf(x) + x * jax.scipy.stats.norm.pdf(x))
+
 
 @functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2, 3))
 def silu(x, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED, max_doublings=3):
@@ -130,6 +145,32 @@ def _softmax_jvp(axis, sched, cfg, primals, tangents):
     y = softmax(x, axis, sched, cfg)
     dy = y * (dx - jnp.sum(y * dx, axis=axis, keepdims=True))
     return y, dy
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2, 3))
+def log_softmax(x, axis: int = -1, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED):
+    """Fused CORDIC log-softmax (max-subtract + CORDIC-exp + CORDIC-log).
+
+    Any rank; reduces along `axis`. -inf/-1e30 masked lanes keep their
+    hugely negative value, matching jax.nn.log_softmax on padded rows.
+    This is the train-path kernel behind cfg.loss_impl="cordic_pallas".
+    """
+    from repro.kernels import softmax_cordic as SM
+
+    xm = jnp.moveaxis(x, axis, -1)
+    lead = xm.shape[:-1]
+    c = xm.shape[-1]
+    y2 = SM.log_softmax_2d(xm.reshape(-1, c).astype(jnp.float32),
+                           sched=sched, cfg=cfg, interpret=_use_interpret())
+    return jnp.moveaxis(y2.reshape(*lead, c).astype(x.dtype), -1, axis)
+
+
+@log_softmax.defjvp
+def _log_softmax_jvp(axis, sched, cfg, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = log_softmax(x, axis, sched, cfg)
+    p = jnp.exp(y)
+    return y, dx - jnp.sum(p * dx, axis=axis, keepdims=True)
 
 
 def sigmoid_q(x_q: jax.Array, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:

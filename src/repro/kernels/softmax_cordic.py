@@ -1,5 +1,6 @@
-"""Fused CORDIC softmax Pallas kernel: max-subtract + CORDIC-exp +
-linear-vectoring normalization in a single VMEM pass.
+"""Fused CORDIC softmax / log-softmax Pallas kernels: max-subtract +
+CORDIC-exp + (linear-vectoring divide | hyperbolic-vectoring log) in a
+single VMEM pass.
 
 TPU mapping of softmax with the paper's shift-add arithmetic:
 
@@ -36,7 +37,9 @@ from repro.kernels.cordic_act import (
     _I32,
     _coshsinh_q,
     _dequantize_f,
+    _exp2_i32,
     _guard_drop,
+    _log_q,
     _lvc_div_q,
     _quantize_f,
     _shr,
@@ -49,12 +52,6 @@ _INV_LN2 = np.float32(1.0 / math.log(2.0))
 #: (2^-29 < half a Q2.14 ULP relative to any row sum).
 _DEAD_CUTOFF = np.float32(-20.0)
 _MIN_K = np.float32(-30.0)
-
-
-def _exp2_i32(k):
-    """2^k for int32 k in [-126, 127] via the f32 exponent field (no exp2)."""
-    return jax.lax.bitcast_convert_type(((k + 127) << 23).astype(jnp.int32),
-                                        jnp.float32)
 
 
 def _softmax_kernel(x_ref, o_ref, *, sched: MRSchedule, cfg: FixedConfig,
@@ -75,7 +72,7 @@ def _softmax_kernel(x_ref, o_ref, *, sched: MRSchedule, cfg: FixedConfig,
     r = jnp.where(dead, 0.0, u - k * _LN2)              # |r| <= ln2/2
 
     # --- CORDIC exp: e^r = cosh r + sinh r (Q2.14 rotation stage) ----------
-    c, s = _coshsinh_q(_quantize_f(r, fb), sched, cfg)  # fmt-width registers
+    c, s = _coshsinh_q(_quantize_f(r, fb, bits), sched, cfg)  # fmt registers
     eq = _wrap16(c + s, bits)                           # e^r in (0.70, 1.42)
     ki = k.astype(_I32)
     ef = jnp.where(dead, 0.0, _dequantize_f(eq, fb) * _exp2_i32(ki))
@@ -84,13 +81,49 @@ def _softmax_kernel(x_ref, o_ref, *, sched: MRSchedule, cfg: FixedConfig,
     ssum = jnp.sum(ef, axis=-1, keepdims=True)
     p = (jax.lax.bitcast_convert_type(ssum, jnp.int32) >> 23) - 127
     ms = ssum * _exp2_i32(-p)
-    mq = jnp.broadcast_to(_quantize_f(ms, fb), eq.shape)
+    mq = jnp.broadcast_to(_quantize_f(ms, fb, bits), eq.shape)
 
     # --- R2-LVC normalization: (e^r / 2) / mS, ratio in (0.175, 0.71) ------
     t = _lvc_div_q(mq, _shr(eq, 1, bits), sched, cfg)   # zfmt quotient codes
     tf = _dequantize_f(_guard_drop(t, cfg), fb)         # no-op when z_guard=0
     out = tf * _exp2_i32(ki - p + 1)
     o_ref[...] = jnp.where(dead, 0.0, out).astype(o_ref.dtype)
+
+
+def _log_softmax_kernel(x_ref, o_ref, *, sched: MRSchedule, cfg: FixedConfig,
+                        n_valid: int):
+    """Fused CORDIC log-softmax: y_i = u_i - ln(sum_j e^{u_j}).
+
+    Shares the max-subtract + CORDIC-exp pass with the softmax kernel; the
+    normalization swaps the R2-LVC division for the hyperbolic-vectoring log
+    leg (ln S = 2 atanh((m-1)/(m+1)) + p ln2 on the sum's mantissa). Masked
+    lanes (-inf / -1e30) keep their hugely negative u, matching
+    jax.nn.log_softmax semantics on padded attention rows.
+    """
+    fb = cfg.fmt.frac_bits
+    bits = cfg.fmt.total_bits
+
+    xf = x_ref[...].astype(jnp.float32)
+    col = jax.lax.broadcasted_iota(jnp.int32, xf.shape, 1)
+    live = col < n_valid
+    xf = jnp.where(live, xf, np.float32(-1e30))
+
+    # --- max-subtract + dyadic reduction (same pass as the softmax kernel) --
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    u = xf - m                                          # <= 0
+    dead = (~live) | (u < _DEAD_CUTOFF)
+    k = jnp.maximum(jnp.floor(u * _INV_LN2 + 0.5), _MIN_K)
+    r = jnp.where(dead, 0.0, u - k * _LN2)              # |r| <= ln2/2
+
+    # --- CORDIC exp for the row sum ----------------------------------------
+    c, s = _coshsinh_q(_quantize_f(r, fb, bits), sched, cfg)
+    eq = _wrap16(c + s, bits)
+    ef = jnp.where(dead, 0.0, _dequantize_f(eq, fb) * _exp2_i32(k.astype(_I32)))
+    ssum = jnp.sum(ef, axis=-1, keepdims=True)          # in [1, cols)
+
+    # --- hyperbolic-vectoring log of the sum -------------------------------
+    lns = _log_q(ssum, cfg)
+    o_ref[...] = (u - lns).astype(o_ref.dtype)
 
 
 def _row_block(rows: int, cols_p: int, target_bytes: int = 1 << 20) -> int:
@@ -102,13 +135,9 @@ def _row_block(rows: int, cols_p: int, target_bytes: int = 1 << 20) -> int:
     return br
 
 
-def softmax_2d(x: jax.Array, *, sched: MRSchedule = PAPER_SCHEDULE,
-               cfg: FixedConfig = PAPER_FIXED, interpret: bool = False) -> jax.Array:
-    """Fused CORDIC softmax over the last axis of a 2D array.
-
-    Columns are padded to the 128-lane boundary; padded lanes are masked
-    inside the kernel (they contribute exactly 0 to the row sum).
-    """
+def _rowwise_call(x: jax.Array, body, sched: MRSchedule, cfg: FixedConfig,
+                  interpret: bool) -> jax.Array:
+    """Pad columns to the 128-lane boundary and run a whole-row kernel."""
     rows, cols = x.shape
     cols_p = max(128, -(-cols // 128) * 128)
     if cols_p != cols:
@@ -117,7 +146,7 @@ def softmax_2d(x: jax.Array, *, sched: MRSchedule = PAPER_SCHEDULE,
     br = _row_block(rows, cols_p)
     grid = (pl.cdiv(rows, br),)
     spec = pl.BlockSpec((br, cols_p), lambda i: (i, 0))
-    kern = functools.partial(_softmax_kernel, sched=sched, cfg=cfg, n_valid=cols)
+    kern = functools.partial(body, sched=sched, cfg=cfg, n_valid=cols)
     out = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((rows, cols_p), x.dtype),
@@ -127,3 +156,20 @@ def softmax_2d(x: jax.Array, *, sched: MRSchedule = PAPER_SCHEDULE,
         interpret=interpret,
     )(x)
     return out[:, :cols]
+
+
+def softmax_2d(x: jax.Array, *, sched: MRSchedule = PAPER_SCHEDULE,
+               cfg: FixedConfig = PAPER_FIXED, interpret: bool = False) -> jax.Array:
+    """Fused CORDIC softmax over the last axis of a 2D array.
+
+    Columns are padded to the 128-lane boundary; padded lanes are masked
+    inside the kernel (they contribute exactly 0 to the row sum).
+    """
+    return _rowwise_call(x, _softmax_kernel, sched, cfg, interpret)
+
+
+def log_softmax_2d(x: jax.Array, *, sched: MRSchedule = PAPER_SCHEDULE,
+                   cfg: FixedConfig = PAPER_FIXED,
+                   interpret: bool = False) -> jax.Array:
+    """Fused CORDIC log-softmax over the last axis of a 2D array."""
+    return _rowwise_call(x, _log_softmax_kernel, sched, cfg, interpret)

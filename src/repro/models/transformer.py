@@ -317,12 +317,18 @@ def apply(params, batch: Dict[str, jax.Array], cfg, cache=None):
 
 
 def loss_fn(params, batch, cfg):
-    """Next-token cross entropy (labels = batch['labels']); adds MoE aux."""
+    """Next-token cross entropy (labels = batch['labels']); adds MoE aux.
+
+    The log-softmax datapath is selected by ``cfg.loss_impl`` (exact |
+    cordic | cordic_pallas — see repro.train.losses); the backward pass is
+    the analytic softmax-minus-onehot form regardless of impl.
+    """
+    from repro.train import losses  # lazy: keeps models importable standalone
+
     logits, aux, _ = apply(params, batch, cfg, cache=None)
     labels = batch["labels"]
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
     mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
-    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = losses.cross_entropy(logits, labels, mask,
+                                impl=getattr(cfg, "loss_impl", "exact"))
     total = loss + aux
     return total, {"loss": loss, "aux": aux, "ppl_proxy": loss}

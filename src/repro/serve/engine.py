@@ -49,6 +49,27 @@ def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
     return decode
 
 
+def make_score_step(cfg):
+    """Teacher-forced per-token log-probs of a prompt.
+
+    The log-softmax datapath follows ``cfg.loss_impl`` (exact | cordic |
+    cordic_pallas — repro.train.losses), so served log-prob scoring uses
+    the same CORDIC exp/log legs as the training loss.
+    """
+    from repro.train import losses
+
+    logp_fn = losses.log_softmax_fn(getattr(cfg, "loss_impl", "exact"))
+
+    def score(params, batch):
+        """batch: {"tokens": (B,S)}. Returns (B,S-1) log p(token_t | <t)."""
+        logits, _, _ = tf.apply(params, batch, cfg, cache=None)
+        logp = logp_fn(logits[:, :-1])
+        nxt = batch["tokens"][:, 1:]
+        return jnp.take_along_axis(logp, nxt[..., None], axis=-1)[..., 0]
+
+    return score
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -69,10 +90,13 @@ class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  eos_token: Optional[int] = None, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
-                 softmax_impl: Optional[str] = None):
+                 softmax_impl: Optional[str] = None,
+                 loss_impl: Optional[str] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
         if softmax_impl is not None:
             cfg = dataclasses.replace(cfg, softmax_impl=softmax_impl)
+        if loss_impl is not None:
+            cfg = dataclasses.replace(cfg, loss_impl=loss_impl)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -84,6 +108,7 @@ class ServeEngine:
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(
             make_decode_step(cfg, greedy=greedy, temperature=temperature))
+        self._score = jax.jit(make_score_step(cfg))
         self._queue: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         self._caches = [tf.init_cache(cfg, 1, max_len, jnp.float32)
@@ -92,6 +117,12 @@ class ServeEngine:
 
     def submit(self, req: Request) -> None:
         self._queue.append(req)
+
+    def score(self, prompt: np.ndarray) -> np.ndarray:
+        """(S,) int32 prompt -> (S-1,) per-token log-probs (teacher-forced),
+        through the cfg.loss_impl-selected log-softmax datapath."""
+        toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+        return np.asarray(self._score(self.params, {"tokens": toks})[0])
 
     def _next_key(self):
         self._rng, sub = jax.random.split(self._rng)

@@ -1,0 +1,94 @@
+"""Cross-entropy training losses with a selectable log-softmax datapath.
+
+This is the train-path payoff of the generalized CORDIC engine: the loss's
+log-softmax can run through the same shift-add exp/log cores that serve the
+forward nonlinearities, selected per model config:
+
+    cfg.loss_impl = "exact"         — jax.nn.log_softmax (XLA transcendental)
+    cfg.loss_impl = "cordic"        — cordic_engine.functions.log_softmax
+                                      (jnp fixed Q2.14: CORDIC exp for the
+                                      sum + hyperbolic-vectoring log leg)
+    cfg.loss_impl = "cordic_pallas" — kernels.ops.log_softmax (the fused
+                                      Pallas kernel, one VMEM pass per row)
+
+``token_nll`` is a ``jax.custom_vjp``: whatever datapath produced the
+primal log-probs, the backward pass is the analytic softmax-minus-onehot
+form (d logits = g * (exp(logp) - onehot(labels))), computed from the saved
+primal output. Training through the quantized forward therefore stays
+exactly as stable as the float loss — the same contract the activation
+wrappers make with their output-derived custom_jvp rules.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LOSS_IMPLS = ("exact", "cordic", "cordic_pallas")
+
+
+def log_softmax_fn(impl: str) -> Callable:
+    """The log-softmax forward for a loss impl (differentiable wrappers)."""
+    if impl == "exact":
+        return jax.nn.log_softmax
+    if impl == "cordic":
+        from repro.cordic_engine import functions as F
+
+        return F.log_softmax
+    if impl == "cordic_pallas":
+        from repro.kernels import ops as kops
+
+        return kops.log_softmax
+    raise ValueError(f"loss impl {impl!r} not in {LOSS_IMPLS}")
+
+
+def _take_label(logp: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def _make_token_nll(logp_fn: Callable) -> Callable:
+    """Per-token -log p(label) with the analytic softmax-onehot backward."""
+
+    @jax.custom_vjp
+    def nll(logits, labels):
+        return -_take_label(logp_fn(logits), labels)
+
+    def fwd(logits, labels):
+        logp = logp_fn(logits)
+        return -_take_label(logp, labels), (logp, labels)
+
+    def bwd(res, g):
+        logp, labels = res
+        p = jnp.exp(logp)  # softmax from the primal log-probs (exact, stable)
+        onehot = jax.nn.one_hot(labels, p.shape[-1], dtype=p.dtype)
+        dlogits = g[..., None] * (p - onehot)
+        return dlogits, np.zeros(labels.shape, dtype=jax.dtypes.float0)
+
+    nll.defvjp(fwd, bwd)
+    return nll
+
+
+_TOKEN_NLL: Dict[str, Callable] = {}
+
+
+def token_nll(logits: jax.Array, labels: jax.Array,
+              impl: str = "exact") -> jax.Array:
+    """-log softmax(logits)[labels] per position; backward = softmax-onehot.
+
+    logits: (..., V) float; labels: (...) int. Returns (...) float32.
+    """
+    fn = _TOKEN_NLL.get(impl)
+    if fn is None:
+        fn = _TOKEN_NLL[impl] = _make_token_nll(log_softmax_fn(impl))
+    return fn(logits, labels)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None,
+                  impl: str = "exact") -> jax.Array:
+    """Masked-mean token cross entropy (the loss_fn reduction)."""
+    nll = token_nll(logits, labels, impl)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -7,6 +7,12 @@ train/loop.py). Microbatch gradient accumulation is a lax.scan over batch
 slices — on a real mesh this *overlaps* the per-microbatch backward
 collectives with the next microbatch's compute (the standard accumulation
 overlap trick); donated state keeps HBM flat.
+
+The loss itself is ``cfg.loss_impl``-selectable (train/losses.py): "cordic"
+/ "cordic_pallas" run the cross-entropy log-softmax through the engine's
+CORDIC exp + hyperbolic-vectoring log legs, with a custom_vjp whose
+backward is the analytic softmax-minus-onehot form — gradients through the
+quantized loss are as stable as the jax.nn baseline.
 """
 from __future__ import annotations
 
@@ -41,6 +47,8 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *, accum: int = 1,
     """Returns train_step(state, batch) -> (state, metrics)."""
 
     def loss_fn(params, batch):
+        # cfg.loss_impl selects the cross-entropy log-softmax datapath
+        # (exact | cordic | cordic_pallas) inside tf.loss_fn.
         return tf.loss_fn(params, batch, cfg)
 
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)

@@ -1,0 +1,87 @@
+"""Wider-format accuracy sweep: Q2.14 -> Q2.20 -> Q2.29 schedules must give
+strictly monotone MAE improvement for exp/log/tanh (closing the ROADMAP's
+"accuracy study pending" item).
+
+The sweep itself lives in benchmarks/accuracy.py::format_sweep — the same
+code that records the numbers into BENCH_accuracy.json and feeds the CI
+regression gate — so the test and the recorded study cannot drift apart.
+"""
+import pathlib
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.cordic_engine import functions as F
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "benchmarks"))
+import accuracy  # noqa: E402  (benchmarks/accuracy.py)
+
+LADDER = ("q2_14", "q2_20", "q2_29")
+
+
+@pytest.fixture(scope="module")
+def sweep():
+    return accuracy.format_sweep()
+
+
+@pytest.mark.parametrize("fn_name", ["exp", "log", "tanh"])
+def test_monotone_mae_improvement(fn_name, sweep):
+    maes = [sweep[f"fmt_sweep/{fn_name}_mae_{n}"] for n in LADDER]
+    for narrow, wide in zip(maes, maes[1:]):
+        assert wide < narrow, (fn_name, dict(zip(LADDER, maes)))
+    # widening 14 -> 20 fraction bits must buy at least ~one decade
+    assert maes[1] < maes[0] / 10.0, (fn_name, maes)
+
+
+def test_sweep_metrics_all_gated(sweep):
+    """Every recorded sweep metric has a regression threshold (and passes).
+
+    check_thresholds also reports THRESHOLDS keys missing from the input
+    (metric-rename protection); this subset run only asserts on sweep keys.
+    """
+    for k in sweep:
+        assert k in accuracy.THRESHOLDS, k
+    bad = [b for b in accuracy.check_thresholds(sweep) if b[0] in sweep]
+    assert not bad, bad
+
+
+def test_format_profiles_resolution_scaling():
+    """Schedule depth tracks the format: smallest elementary angle of each
+    profile's vectoring stage is within 2x of the format resolution."""
+    for name in LADDER:
+        p = F.FORMAT_PROFILES[name]
+        assert p.vectoring.resolution <= 2.0 * p.cfg.fmt.resolution, name
+        assert p.division.resolution == 2.0 ** -p.cfg.fmt.frac_bits, name
+
+
+def test_divide_improves_with_width():
+    rng = np.random.default_rng(5)
+    y = jnp.asarray(rng.uniform(-10, 10, 2048), jnp.float32)
+    x = jnp.asarray(rng.uniform(0.1, 10, 2048), jnp.float32)
+    want = np.asarray(y, np.float64) / np.asarray(x, np.float64)
+    maes = []
+    for name in ("q2_14", "q2_20"):
+        p = F.FORMAT_PROFILES[name]
+        got = F.divide_fixed(y, x, sched=p.division, cfg=p.cfg)
+        maes.append(float(np.abs(np.asarray(got, np.float64) - want).mean()))
+    assert maes[1] < maes[0] / 10.0, maes
+
+
+def test_kernel_ops_honor_wider_formats():
+    """The Pallas exp/log kernels must stay bit-identical to the jnp fixed
+    path under the Q2.20 profile too (quantizer width + vectoring depth are
+    format-sized, not hardcoded to 16 bits)."""
+    from repro.kernels import ops as kops
+
+    p = F.FORMAT_PROFILES["q2_20"]
+    x = jnp.linspace(-4.0, 4.0, 801, dtype=jnp.float32)
+    got = np.asarray(kops.exp(x, p.pipeline, p.cfg))
+    want = np.asarray(F.exp_fixed(x, sched=p.rotation, cfg=p.cfg))
+    np.testing.assert_array_equal(got, want)
+
+    xl = jnp.asarray(np.geomspace(0.1, 10.0, 801), jnp.float32)
+    got = np.asarray(kops.log(xl, p.pipeline, p.cfg))
+    want = np.asarray(F.log_fixed(xl, sched=p.vectoring, cfg=p.cfg))
+    np.testing.assert_array_equal(got, want)
