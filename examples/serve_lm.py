@@ -1,11 +1,16 @@
 """Batched serving demo: continuous batching with CORDIC activations.
 
-    PYTHONPATH=src python examples/serve_lm.py [--requests 8] [--slots 4]
+    PYTHONPATH=src python examples/serve_lm.py [--requests 8] [--slots 4] \
+        [--temperature 0.8] [--top-k 40]
 
 Loads a small GQA LM (optionally from a train_lm.py checkpoint), submits a
 queue of prompt requests, and serves them through the slot-based engine:
-prefill + per-step batched decode, slots refilled as requests finish.
-All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
+per-slot prefill into a *stacked* (slots, ...) cache tree, then one jitted
+vmapped decode call per engine step for all slots at once — slots refilled
+from the queue as requests finish. Sampling runs on the CORDIC datapath
+too: temperature scaling is the linear-rotation multiply by the R2-LVC
+reciprocal of T, with per-request temperature/top-k/greedy mixes in the
+same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
 """
 import argparse
 import sys
@@ -19,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -27,6 +33,11 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--act", default="cordic_fixed")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filtering; 0 = full vocab")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -36,10 +47,14 @@ def main():
         rope_theta=1e4, dtype="float32",
     )
     print(f"[serve_lm] model {cfg.param_counts()['total'] / 1e6:.1f}M params, "
-          f"act_impl={cfg.act_impl}, slots={args.slots}")
+          f"act_impl={cfg.act_impl}, slots={args.slots}, "
+          f"T={args.temperature}, top_k={args.top_k}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
 
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128)
+    # temperature <= 0 resolves to greedy inside SamplingParams
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
+                      sampling=sampling, seed=args.seed)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -54,13 +69,15 @@ def main():
     while eng.step():
         steps += 1
     wall = time.time() - t0
+    done = eng.run()
     total_new = sum(len(r.out) for r in reqs)
-    print(f"[serve_lm] served {len(reqs)} requests / {total_new} tokens in "
-          f"{steps} engine steps, {wall:.1f}s "
-          f"({total_new / wall:.1f} tok/s on host CPU)")
+    print(f"[serve_lm] served {len(done)} requests / {total_new} tokens in "
+          f"{steps} engine steps ({steps} batched decode dispatches), "
+          f"{wall:.1f}s ({total_new / wall:.1f} tok/s on host CPU)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> out={r.out}")
     assert all(r.done for r in reqs)
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
     print("[serve_lm] OK — all requests completed.")
 
 

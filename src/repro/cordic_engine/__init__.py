@@ -55,6 +55,7 @@ from repro.cordic_engine.schedule import (  # noqa: F401
     HYP_ROTATION,
     HYP_VECTORING,
     HYPERBOLIC,
+    LIN_ROTATION,
     LIN_VECTORING,
     LINEAR,
     MRSchedule,
@@ -65,6 +66,7 @@ from repro.cordic_engine.schedule import (  # noqa: F401
     CordicSchedule,
     hyp_rotation_for,
     hyp_vectoring_for,
+    lin_rotation_for,
     lin_vectoring_for,
     mr_schedule_for,
 )

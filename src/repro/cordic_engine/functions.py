@@ -13,6 +13,7 @@ Derivations (mode x direction -> function):
     hyperbolic rotation   cosh z, sinh z            ->  exp z = cosh + sinh
     hyperbolic vectoring  atanh(y/x)                ->  log m = 2 atanh((m-1)/(m+1))
     linear vectoring      y/x                       ->  divide, reciprocal
+    linear rotation       y = x * z                 ->  multiply
     circular rotation     cos z, sin z
 
 Range reduction:
@@ -20,6 +21,7 @@ Range reduction:
     exp:    x = k ln2 + r, |r| <= ln2/2; e^x = 2^k (cosh r + sinh r)
     log:    x = m 2^p, m in [0.5, 1);   ln x = 2 atanh((m-1)/(m+1)) + p ln2
     divide: y/x = (m_y/m_x) 2^(p_y-p_x), mantissa ratio in (0.5, 2)
+    multiply: a b = (m_a m_b) 2^(p_a+p_b), mantissa product in [0.25, 1)
     sincos: t = n (pi/2) + r, |r| <= pi/4; quadrant swap/negate by n mod 4
 
 Composites: softplus = relu(x) + log(1 + exp(-|x|)); elu from exp;
@@ -47,7 +49,9 @@ from repro.cordic_engine.schedule import (
     CIRC_ROTATION,
     HYP_ROTATION,
     HYP_VECTORING,
+    LIN_ROTATION,
     LIN_VECTORING,
+    ROTATION,
     CordicSchedule,
     MRSchedule,
     hyp_rotation_for,
@@ -238,6 +242,46 @@ def reciprocal_fixed(x, sched: CordicSchedule = LIN_VECTORING,
 
 def reciprocal_float(x, sched: CordicSchedule = LIN_VECTORING):
     return divide_float(jnp.ones_like(_f32(x)), x, sched)
+
+
+# --------------------------------------------------------------------------
+# multiplication (linear rotation)
+# --------------------------------------------------------------------------
+def multiply_fixed(a, b, sched: CordicSchedule = LIN_ROTATION,
+                   cfg: FixedConfig = PAPER_FIXED):
+    """a*b via linear rotation (y accumulates x * z0) on frexp mantissas.
+
+    Both operands reduce to m 2^p with m in [0.5, 1): the multiplicand
+    mantissa sits in the (linear-mode constant) x register, the multiplier
+    mantissa is the rotation angle z0 — inside the schedule's convergence
+    range sum(2^-j) = 1 - 2^-14 — and the product m_a m_b in [0.25, 1)
+    lands inside Q2.14 with no overflow:
+
+        a b = (m_a m_b) 2^(p_a + p_b)
+
+    The only non-shift-add ops are the frexp/exp2 boundary, exactly like
+    divide. A zero operand returns 0 (sign(0) kills the product).
+    """
+    a, b = jnp.broadcast_arrays(_f32(a), _f32(b))
+    sign = jnp.sign(a) * jnp.sign(b)
+    ma, pa = jnp.frexp(jnp.abs(a))
+    mb, pb = jnp.frexp(jnp.abs(b))
+    xq = fp.quantize(jnp.maximum(ma, np.float32(0.5)), cfg.fmt)
+    zq = fp.quantize(jnp.maximum(mb, np.float32(0.5)), cfg.zfmt)
+    _, y, _ = eng.sweep_q(xq, jnp.zeros_like(xq), zq, sched, ROTATION, cfg)
+    prod = fp.dequantize(y, cfg.fmt)
+    return sign * prod * jnp.exp2((pa + pb).astype(jnp.float32))
+
+
+def multiply_float(a, b, sched: CordicSchedule = LIN_ROTATION):
+    a, b = jnp.broadcast_arrays(_f32(a), _f32(b))
+    sign = jnp.sign(a) * jnp.sign(b)
+    ma, pa = jnp.frexp(jnp.abs(a))
+    mb, pb = jnp.frexp(jnp.abs(b))
+    _, y, _ = eng.sweep_f(jnp.maximum(ma, np.float32(0.5)),
+                          jnp.zeros_like(ma),
+                          jnp.maximum(mb, np.float32(0.5)), sched, ROTATION)
+    return sign * y * jnp.exp2((pa + pb).astype(jnp.float32))
 
 
 # --------------------------------------------------------------------------

@@ -126,6 +126,11 @@ HYP_ROTATION = CordicSchedule(HYPERBOLIC, tuple(range(2, 10)), tuple(range(4, 8)
 HYP_VECTORING = CordicSchedule(HYPERBOLIC, _hyp_vectoring_js())
 #: Linear vectoring (division) to 2^-14: j=1..14 (the paper's R2-LVC).
 LIN_VECTORING = CordicSchedule(LINEAR, tuple(range(1, 15)))
+#: Linear rotation (multiplication): the SAME stage list as the R2-LVC
+#: divide, run in rotation direction so y accumulates x * z0 for
+#: |z0| < sum 2^-j. Aliased, not copied — tuning the linear stage list can
+#: never split the divide and multiply datapaths.
+LIN_ROTATION = LIN_VECTORING
 #: Circular rotation for sin/cos: j=0..13, range sum atan(2^-j) ~ 1.743 > pi/4.
 CIRC_ROTATION = CordicSchedule(CIRCULAR, tuple(range(0, 14)))
 
@@ -150,6 +155,10 @@ def hyp_vectoring_for(frac_bits: int) -> CordicSchedule:
 def lin_vectoring_for(frac_bits: int) -> CordicSchedule:
     """Linear vectoring to 2^-frac_bits (one digit per fraction bit)."""
     return CordicSchedule(LINEAR, tuple(range(1, frac_bits + 1)))
+
+
+#: Linear rotation (multiply) sizing: same stages as the divide, by design.
+lin_rotation_for = lin_vectoring_for
 
 
 def mr_schedule_for(frac_bits: int) -> MRSchedule:

@@ -18,6 +18,7 @@ import numpy as np
 from repro import configs
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main(argv=None):
@@ -29,6 +30,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (CORDIC datapath); 0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch, act_impl=args.act_impl) if args.smoke
@@ -39,24 +43,24 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, input_mode="tokens")
     print(f"[serve] arch={cfg.name} slots={args.slots}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len)
+    # temperature <= 0 resolves to greedy inside SamplingParams
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
+                      sampling=sampling)
 
     rng = np.random.default_rng(0)
-    reqs = []
     for i in range(args.requests):
-        r = Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size,
-                                        int(rng.integers(4, 12))).astype(np.int32),
-                    max_new_tokens=args.max_new)
-        reqs.append(r)
-        eng.submit(r)
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(4, 12))).astype(np.int32),
+            max_new_tokens=args.max_new))
     t0 = time.time()
-    steps = 0
-    while eng.step():
-        steps += 1
-    total = sum(len(r.out) for r in reqs)
-    print(f"[serve] {len(reqs)} requests, {total} tokens, {steps} steps, "
+    done = eng.run()
+    total = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)} requests, {total} tokens, "
           f"{time.time() - t0:.1f}s")
+    assert len(done) == args.requests
     return 0
 
 

@@ -11,6 +11,9 @@ Public API:
     model_spec(cfg)                      -> param spec tree
     init(cfg, key, dtype)                -> params (jax.eval_shape-able)
     init_cache(cfg, batch, max_len)      -> decode cache tree
+    stack_caches(caches)                 -> (slots, ...) stacked cache tree
+    insert_slot(stacked, cache, slot)    -> stacked tree with slot replaced
+    take_slot(stacked, slot)             -> one slot's cache tree
     apply(params, batch, cfg, cache)     -> (logits, aux, new_cache)
     loss_fn(params, batch, cfg)          -> (loss, metrics)
 """
@@ -227,6 +230,40 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         cache["shared"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), one)
     return cache
+
+
+def stack_caches(caches: List[Any]) -> Any:
+    """Stack per-request decode caches into one (slots, ...) pytree.
+
+    Every leaf (KV buffers, recurrent states, the scalar ``idx`` position
+    counters) gains a leading slot axis; per-slot scalars like ``idx``
+    become (slots,) arrays, which is what lets a vmapped decode advance
+    each slot at its own sequence position in a single dispatch."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *caches)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert_slot_jit(stacked, cache, slot):
+    return jax.tree.map(
+        lambda full, one: jax.lax.dynamic_update_index_in_dim(
+            full, one.astype(full.dtype), slot, 0),
+        stacked, cache)
+
+
+def insert_slot(stacked: Any, cache: Any, slot: int) -> Any:
+    """Write one request's cache into slot ``slot`` of a stacked cache tree
+    (admission after prefill). Leaf dtypes follow the stacked tree.
+
+    Jitted with the stacked tree donated, so on backends with buffer
+    donation the write is in place rather than a full-stack copy per
+    admission; the caller must treat the input tree as consumed."""
+    return _insert_slot_jit(stacked, cache, jnp.asarray(slot, jnp.int32))
+
+
+def take_slot(stacked: Any, slot: int) -> Any:
+    """Extract slot ``slot`` from a stacked cache tree (inverse of
+    insert_slot; used by tests and debugging)."""
+    return jax.tree.map(lambda full: full[slot], stacked)
 
 
 def _remat_wrap(apply_fn, cfg):

@@ -3,9 +3,20 @@ continuous-batching loop.
 
 `make_prefill_step`/`make_decode_step` are the functions the dry-run lowers
 for the decode shapes (decode_32k / long_500k): one new token against a KV /
-recurrent-state cache. The engine runs them on whatever mesh it is given;
-requests are packed into fixed batch slots and refilled as sequences finish
-(continuous batching at step granularity).
+recurrent-state cache.
+
+`ServeEngine` packs requests into fixed batch slots and refills them as
+sequences finish (continuous batching at step granularity). The per-slot KV /
+recurrent caches are *stacked* into one (slots, ...) pytree
+(models.transformer.stack_caches), so every engine step issues exactly one
+jitted decode call — a vmap over the slot axis — regardless of how many
+slots are active; per-slot sequence positions live in the stacked ``idx``
+leaves. Sampling (serve.sampling) is per-slot: each request carries its own
+SamplingParams, temperature scaling runs through the CORDIC linear-rotation
+multiply by the R2-LVC reciprocal, and every request draws from its own rng
+key stream fold_in(fold_in(base, rid), t) — making the emitted tokens
+independent of slot placement and batch composition (bit-reproducible
+against a sequential decode of the same requests).
 """
 from __future__ import annotations
 
@@ -17,6 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tf
+from repro.serve import sampling as sp
+from repro.serve.sampling import SamplingParams
 
 
 def make_prefill_step(cfg):
@@ -27,12 +40,14 @@ def make_prefill_step(cfg):
 
 
 def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
+    """Single-cache decode step (the shape the dry-run lowers; the engine
+    itself uses make_batched_decode_step over stacked slot caches)."""
     def decode(params, cache, tokens, rng=None):
         """tokens: (B,1) int32 (or (B,1,d) embeds). Returns next token ids.
 
         Sampling decode consumes `rng` — the caller threads a fresh split
-        per step (see ServeEngine.step); reusing one key would make every
-        step/batch draw the same sample.
+        per step; reusing one key would make every step/batch draw the
+        same sample.
         """
         batch = ({"tokens": tokens} if cfg.input_mode == "tokens"
                  else {"embeds": tokens})
@@ -46,6 +61,46 @@ def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
             nxt = jax.random.categorical(
                 rng, last / temperature).astype(jnp.int32)
         return nxt, cache
+    return decode
+
+
+def make_batched_decode_step(cfg, *, greedy_only: bool = False):
+    """One jitted decode for ALL slots: vmap over the stacked cache axis.
+
+    Arguments of the returned function (S = slot count):
+        params        — model params (broadcast across slots)
+        caches        — stacked (S, 1, ...) cache pytree (stack_caches)
+        tokens        — (S, 1) int32 previous token per slot
+        rids, steps   — (S,) int32: request id + token index, hashed into
+                        per-slot keys fold_in(fold_in(base_key, rid), step)
+        temps, top_ks, greedy — (S,) per-slot SamplingParams (traced, so a
+                        changed request mix never recompiles)
+        base_key      — engine-level PRNG key
+
+    Returns ((S,) int32 next tokens, updated stacked caches). Inactive
+    slots decode garbage tokens against their stale caches — the engine
+    masks them on the host; their caches are re-prefilled at admission.
+
+    ``greedy_only`` compiles the argmax-only variant: an all-greedy batch
+    skips the sampling datapath (CORDIC temperature multiply, vocab sort,
+    categorical draw) entirely. Greedy tokens are argmax of the raw logits
+    in BOTH variants, so which one runs never changes the output.
+    """
+    def decode(params, caches, tokens, rids, steps, temps, top_ks, greedy,
+               base_key):
+        def one(cache, tok):
+            logits, _, nc = tf.apply(params, {"tokens": tok[None, :]}, cfg,
+                                     cache=cache)
+            return logits[0, -1], nc
+
+        last, caches = jax.vmap(one)(caches, tokens)
+        if greedy_only:
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            keys = jax.vmap(lambda r, t: sp.request_key(base_key, r, t))(rids,
+                                                                         steps)
+            nxt = sp.sample_batched(last, keys, temps, top_ks, greedy)
+        return nxt, caches
     return decode
 
 
@@ -75,21 +130,28 @@ class Request:
     rid: int
     prompt: np.ndarray             # (S,) int32
     max_new_tokens: int = 16
+    sampling: Optional[SamplingParams] = None   # None -> engine default
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
 
 class ServeEngine:
-    """Slot-based continuous batching on top of prefill/decode steps.
+    """Slot-based continuous batching on top of prefill + one batched decode.
 
-    Static batch of `slots`; each slot holds one request; finished slots are
-    refilled from the queue between decode steps (per-slot cache reset via
-    masking — slot caches are re-prefilled on admission).
+    Static batch of `slots`, all caches stacked into one (slots, ...) tree;
+    each slot holds one request and an active-slot mask tracks occupancy.
+    Admission prefills a fresh single-request cache and writes it into the
+    stack (insert_slot); every `step()` then advances ALL slots with exactly
+    one jitted vmapped decode call and appends the sampled token to each
+    active request. Finished slots are refilled from the queue between
+    steps. Per-request sampling params can mix greedy / temperature / top-k
+    within one batch (see serve.sampling).
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
                  eos_token: Optional[int] = None, greedy: bool = True,
                  temperature: float = 1.0, seed: int = 0,
+                 sampling: Optional[SamplingParams] = None,
                  softmax_impl: Optional[str] = None,
                  loss_impl: Optional[str] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
@@ -102,18 +164,39 @@ class ServeEngine:
         self.slots = slots
         self.max_len = max_len
         self.eos = eos_token
-        self.greedy = greedy
-        self.temperature = temperature
-        self._rng = jax.random.PRNGKey(seed)
+        self.default_sampling = (sampling if sampling is not None
+                                 else SamplingParams(temperature=temperature,
+                                                     greedy=greedy))
+        self._base_key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(
-            make_decode_step(cfg, greedy=greedy, temperature=temperature))
+        sample_fn = jax.jit(make_batched_decode_step(cfg))
+        greedy_fn = jax.jit(make_batched_decode_step(cfg, greedy_only=True))
+
+        def _dispatch(params, caches, tokens, rids, steps, temps, top_ks,
+                      greedy, base_key):
+            # all-greedy batches take the argmax-only compile (no sampling
+            # datapath); tokens are identical either way, see
+            # make_batched_decode_step
+            fn = greedy_fn if bool(np.asarray(greedy).all()) else sample_fn
+            return fn(params, caches, tokens, rids, steps, temps, top_ks,
+                      greedy, base_key)
+
+        self._decode = _dispatch
+        self._sample = jax.jit(sp.sample_batched)
         self._score = jax.jit(make_score_step(cfg))
         self._queue: List[Request] = []
+        self._done: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
-        self._caches = [tf.init_cache(cfg, 1, max_len, jnp.float32)
-                        for _ in range(slots)]
+        self._caches = tf.stack_caches(
+            [tf.init_cache(cfg, 1, max_len, jnp.float32)
+             for _ in range(slots)])
         self._next_tok = np.zeros((slots, 1), np.int32)
+        # per-slot host state mirrored into the batched decode each step
+        self._rids = np.zeros(slots, np.int32)
+        self._steps = np.zeros(slots, np.int32)    # == len(req.out) per slot
+        self._temps = np.ones(slots, np.float32)
+        self._top_ks = np.zeros(slots, np.int32)
+        self._greedy = np.ones(slots, bool)
 
     def submit(self, req: Request) -> None:
         self._queue.append(req)
@@ -124,52 +207,94 @@ class ServeEngine:
         toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
         return np.asarray(self._score(self.params, {"tokens": toks})[0])
 
-    def _next_key(self):
-        self._rng, sub = jax.random.split(self._rng)
-        return sub
+    @property
+    def active_mask(self) -> np.ndarray:
+        """(slots,) bool — which slots currently hold a request."""
+        return np.asarray([a is not None for a in self._active])
+
+    def _finish(self, req: Request) -> None:
+        req.done = True
+        self._done.append(req)
+
+    def _sample_first(self, req: Request, logits) -> int:
+        """Sample the prefill-emitted token (step 0 of the request's key
+        stream) with the request's own SamplingParams."""
+        temp, top_k, greedy = (req.sampling or self.default_sampling).resolved()
+        key = sp.request_key(self._base_key, req.rid, 0)
+        tok = self._sample(logits[:1], key[None],
+                           jnp.full((1,), temp, jnp.float32),
+                           jnp.full((1,), top_k, jnp.int32),
+                           jnp.full((1,), greedy, bool))
+        return int(tok[0])
 
     def _admit(self) -> None:
+        """Fill free slots from the queue: prefill into a fresh cache, write
+        it into the stacked tree, and emit the first token. A request whose
+        first token already hits `eos_token` or whose budget is
+        max_new_tokens=1 finishes here and never occupies a slot."""
         for s in range(self.slots):
-            if self._active[s] is None and self._queue:
+            while self._active[s] is None and self._queue:
                 req = self._queue.pop(0)
-                self._active[s] = req
                 cache = tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
                 toks = jnp.asarray(req.prompt[None, :], jnp.int32)
                 logits, cache = self._prefill(self.params, cache,
                                               {"tokens": toks})
-                self._caches[s] = cache
-                if self.greedy:
-                    first = int(jnp.argmax(logits[0]))
-                else:
-                    first = int(jax.random.categorical(
-                        self._next_key(), logits[0] / self.temperature))
-                self._next_tok[s, 0] = first
+                first = self._sample_first(req, logits)
                 req.out.append(first)
+                if (self.eos is not None and first == self.eos) or \
+                        len(req.out) >= req.max_new_tokens:
+                    self._finish(req)
+                    continue                      # slot stays free; try next
+                self._active[s] = req
+                self._caches = tf.insert_slot(self._caches, cache, s)
+                self._next_tok[s, 0] = first
+                temp, top_k, greedy = (req.sampling
+                                       or self.default_sampling).resolved()
+                self._rids[s] = req.rid
+                self._steps[s] = len(req.out)
+                self._temps[s] = temp
+                self._top_ks[s] = top_k
+                self._greedy[s] = greedy
 
     def step(self) -> int:
-        """One decode step across all active slots; returns #active."""
+        """One batched decode step across all slots; returns #active.
+
+        Exactly ONE jitted decode call regardless of slot count: inactive
+        slots ride along (their output is ignored and their cache is
+        re-prefilled at admission), so the dispatch count and the compiled
+        shape never depend on occupancy.
+        """
         self._admit()
         active = [s for s in range(self.slots) if self._active[s] is not None]
         if not active:
             return 0
+        nxt, self._caches = self._decode(
+            self.params, self._caches, jnp.asarray(self._next_tok),
+            jnp.asarray(self._rids), jnp.asarray(self._steps),
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._greedy), self._base_key)
+        nxt = np.asarray(nxt)
         for s in active:
             req = self._active[s]
-            rng = None if self.greedy else self._next_key()
-            nxt, cache = self._decode(self.params, self._caches[s],
-                                      jnp.asarray(self._next_tok[s:s + 1]),
-                                      rng)
-            self._caches[s] = cache
-            tok = int(nxt[0])
+            tok = int(nxt[s])
             req.out.append(tok)
             self._next_tok[s, 0] = tok
+            self._steps[s] = len(req.out)
             if (self.eos is not None and tok == self.eos) or \
                     len(req.out) >= req.max_new_tokens:
-                req.done = True
+                self._finish(req)
                 self._active[s] = None
+                # reset to greedy defaults so a vacated sampling slot can't
+                # pin _dispatch off the cheap all-greedy compile
+                self._temps[s] = 1.0
+                self._top_ks[s] = 0
+                self._greedy[s] = True
         return len(active)
 
     def run(self) -> List[Request]:
-        done: List[Request] = []
+        """Serve until queue and slots drain; returns the finished requests
+        (every submitted request, in completion order)."""
         while self._queue or any(a is not None for a in self._active):
             self.step()
+        done, self._done = self._done, []
         return done

@@ -1,0 +1,111 @@
+"""Decode-path token sampling on the CORDIC datapath.
+
+Temperature scaling rides the same shift-add engine as the rest of the
+serving stack instead of a float ``logits / T``:
+
+    1/T      — the R2-LVC linear-vectoring divide (functions.reciprocal_*)
+    logits/T — the linear-*rotation* multiply (functions.multiply_*): the
+               reciprocal mantissa is the rotation angle, the logit mantissa
+               sits in the constant x register, y accumulates the product
+
+so the only non-shift-add ops are the frexp/exp2 boundary, exactly like the
+softmax/log-softmax legs. ``impl="exact"`` keeps the float division as an
+oracle.
+
+``SamplingParams`` is carried per request (serve.engine.Request), so one
+batched decode step can mix greedy slots with sampled slots at different
+temperatures/top-k: every per-slot knob is a traced array, and the batched
+sampler is a single vmap — no recompilation when the mix changes.
+
+Greedy is argmax over the raw logits (temperature and top-k are monotone,
+so scaling is skipped for determinism and bit-identity with the historic
+greedy decode path). ``temperature <= 0`` resolves to greedy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cordic_engine import functions as F
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    ``temperature`` — softmax temperature; <= 0 means greedy.
+    ``top_k``       — keep the k highest logits (0 = full vocab).
+    ``greedy``      — force argmax regardless of temperature.
+    """
+
+    temperature: float = 1.0
+    top_k: int = 0
+    greedy: bool = False
+
+    def resolved(self) -> Tuple[float, int, bool]:
+        """(temperature, top_k, greedy) with temperature<=0 folded into
+        greedy and the temperature kept strictly positive for 1/T."""
+        greedy = bool(self.greedy) or float(self.temperature) <= 0.0
+        temp = 1.0 if greedy else float(self.temperature)
+        return temp, int(self.top_k), greedy
+
+
+GREEDY = SamplingParams(greedy=True)
+
+
+def scale_by_temperature(logits, temperature, impl: str = "cordic"):
+    """logits / T through the CORDIC engine: 1/T from the R2-LVC divide,
+    then the linear-rotation multiply. ``impl="exact"`` is the float oracle."""
+    if impl == "exact":
+        return logits / temperature
+    inv_t = F.reciprocal_fixed(temperature)
+    return F.multiply_fixed(logits, inv_t)
+
+
+def top_k_mask(logits, k):
+    """Mask all but the k largest entries of the last axis to NEG_INF.
+
+    ``k`` may be a traced scalar (per-slot dynamic): the threshold is the
+    k-th largest value via a sorted gather, so no dynamic shapes appear.
+    k <= 0 keeps the full vocabulary. Ties at the threshold all survive.
+    """
+    v = logits.shape[-1]
+    kk = jnp.clip(jnp.where(k > 0, k, v), 1, v)
+    thr = jnp.take(jnp.sort(logits, axis=-1), v - kk, axis=-1)
+    return jnp.where(logits >= thr[..., None], logits, NEG_INF)
+
+
+def sample_one(logits, key, temperature, top_k, greedy, impl: str = "cordic"):
+    """One row: (V,) logits -> int32 token id.
+
+    Greedy rows take argmax of the *raw* logits; sampled rows draw from
+    categorical(top_k(logits / T)) with the caller's key.
+    """
+    scaled = scale_by_temperature(logits, temperature, impl)
+    drawn = jax.random.categorical(key, top_k_mask(scaled, top_k))
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1), drawn).astype(jnp.int32)
+
+
+def sample_batched(logits, keys, temperatures, top_ks, greedy, impl: str = "cordic"):
+    """Batched sampler: (B,V) logits + per-row keys/params -> (B,) int32.
+
+    Each row uses its own rng key, so a row's draw depends only on
+    (logits_row, key_row, params_row) — never on batch composition. That is
+    what makes the engine's batched decode bit-reproducible against a
+    sequential per-request decode of the same streams.
+    """
+    return jax.vmap(functools.partial(sample_one, impl=impl))(
+        logits, keys, temperatures, top_ks, greedy)
+
+
+def request_key(base_key, rid, step):
+    """The key for token ``step`` of request ``rid``: a per-request stream
+    fold_in(fold_in(base, rid), step), independent of slot placement and
+    batch composition (step 0 is the prefill-emitted token)."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, rid), step)

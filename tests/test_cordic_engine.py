@@ -26,6 +26,7 @@ f32 = lambda v: jnp.asarray(v, dtype=jnp.float32)
 # ---------------------------------------------------------------------------
 # Bit-identity of the engine specialization with the paper pipeline
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_engine_sigmoid_bit_identical_all_codes():
     """Engine-specialized sigmoid == the independent kernel transcription of
     the seed Q2.14 pipeline, over ALL 2^16 input codes (in- and out-of-domain
@@ -108,6 +109,52 @@ def test_reciprocal_fixed():
     got = np.asarray(F.reciprocal_fixed(x), np.float64)
     rel = np.abs(got * np.asarray(x, np.float64) - 1.0)
     assert rel.max() < 2e-3
+
+
+def test_multiply_fixed_full_range():
+    """Linear-rotation multiply: rel error at the divide's accuracy class."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(-100, 100, 4096), jnp.float32)
+    b = jnp.asarray(np.sign(rng.uniform(-1, 1, 4096))
+                    * np.exp(rng.uniform(np.log(1e-3), np.log(1e3), 4096)),
+                    jnp.float32)
+    got = np.asarray(F.multiply_fixed(a, b), np.float64)
+    want = np.asarray(a, np.float64) * np.asarray(b, np.float64)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-9)
+    assert rel.max() < 2e-3
+
+
+def test_multiply_float_algorithmic_error():
+    rng = np.random.default_rng(2)
+    a = jnp.asarray(rng.uniform(-10, 10, 2048), jnp.float32)
+    b = jnp.asarray(rng.uniform(-10, 10, 2048), jnp.float32)
+    got = np.asarray(F.multiply_float(a, b), np.float64)
+    want = np.asarray(a, np.float64) * np.asarray(b, np.float64)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1e-9)
+    assert rel.max() < 2e-4
+
+
+def test_multiply_zero_operands_and_broadcast():
+    assert float(F.multiply_fixed(f32(0.0), f32(3.0))) == 0.0
+    assert float(F.multiply_fixed(f32(5.0), f32(0.0))) == 0.0
+    # broadcasting: (V,) logits times a scalar reciprocal (the sampler shape)
+    v = jnp.linspace(-4.0, 4.0, 33)
+    out = F.multiply_fixed(v, f32(0.5))
+    assert out.shape == v.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v) * 0.5, atol=2e-3)
+
+
+def test_multiply_reciprocal_compose_as_division():
+    """multiply(y, reciprocal(x)) tracks divide(y, x) — the temperature
+    datapath (1/T via R2-LVC, then linear rotation) stays consistent."""
+    rng = np.random.default_rng(3)
+    y = jnp.asarray(rng.uniform(-50, 50, 1024), jnp.float32)
+    x = jnp.asarray(np.exp(rng.uniform(np.log(0.1), np.log(10), 1024)),
+                    jnp.float32)
+    via_mul = np.asarray(F.multiply_fixed(y, F.reciprocal_fixed(x)), np.float64)
+    want = np.asarray(y, np.float64) / np.asarray(x, np.float64)
+    rel = np.abs(via_mul - want) / np.maximum(np.abs(want), 1e-9)
+    assert rel.max() < 4e-3
 
 
 def test_sincos_fixed_error():

@@ -1,11 +1,15 @@
-"""Serving engine tests: prefill/decode steps, continuous batching slots."""
+"""Serving engine tests: prefill/decode steps, continuous batching slots,
+the batched stacked-cache decode path, and the serving-loop regressions
+(run() result collection, admission eos/max_new_tokens off-by-one)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine, make_decode_step, make_prefill_step
+from repro.serve.sampling import SamplingParams
 
 
 def _cfg():
@@ -108,3 +112,144 @@ def test_engine_sampling_varies_across_steps():
     assert len(set(out_a)) > 1                   # not frozen on one token
     assert out_a != out_b                        # seed actually matters
     assert all(0 <= t < cfg.vocab_size for t in out_a)
+
+
+# ---------------------------------------------------------------------------
+# Serving-loop regressions
+# ---------------------------------------------------------------------------
+def _mk_requests(cfg, n, *, max_new=6, plen=5, seed=0, sampling=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+                    max_new_tokens=max_new, sampling=sampling)
+            for i in range(n)]
+
+
+def test_run_returns_finished_requests():
+    """run() used to return an always-empty list; it must hand back every
+    submitted request, finished."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    reqs = _mk_requests(cfg, 5)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [r.rid for r in reqs]
+    assert all(r.done and len(r.out) == 6 for r in done)
+    assert eng.run() == []                       # drained; no double-return
+
+
+def test_max_new_tokens_1_stops_at_prefill():
+    """The admission off-by-one: a max_new_tokens=1 request must finish on
+    the prefill-emitted token, not overshoot by a full decode step."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64)
+    reqs = _mk_requests(cfg, 3, max_new=1)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    assert all(len(r.out) == 1 for r in done), [r.out for r in done]
+
+
+def test_eos_on_first_token_stops_at_prefill():
+    """A request whose prefill-emitted token IS eos must finish at admission
+    with exactly one output token."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(2))
+    prompt = np.asarray([3, 5, 7], np.int32)
+
+    probe = ServeEngine(cfg, params, slots=1, max_len=32)
+    probe.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+    first = probe.run()[0].out[0]
+
+    eng = ServeEngine(cfg, params, slots=1, max_len=32, eos_token=first)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=8)
+    eng.submit(req)
+    done = eng.run()
+    assert [r.rid for r in done] == [0]
+    assert req.out == [first]
+
+
+def test_step_issues_single_decode_call():
+    """One engine step == exactly one jitted decode dispatch, whatever the
+    slot count / occupancy."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=4, max_len=64)
+    calls = []
+    inner = eng._decode
+    eng._decode = lambda *a, **k: (calls.append(1), inner(*a, **k))[1]
+    for r in _mk_requests(cfg, 6, max_new=4):
+        eng.submit(r)
+    steps = 0
+    while eng.step():
+        steps += 1
+        assert steps < 100
+    assert len(calls) == steps
+
+
+def _serve(cfg, params, reqs, *, slots, seed=0, **kw):
+    eng = ServeEngine(cfg, params, slots=slots, max_len=64, seed=seed, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("sampling", [
+    SamplingParams(greedy=True),
+    SamplingParams(temperature=2.5),
+    SamplingParams(temperature=1.5, top_k=8),
+])
+def test_batched_decode_matches_sequential(sampling):
+    """Bit-for-bit equivalence: the same requests served at slots=4 and
+    slots=1 (sequential) emit identical token streams, greedy AND seeded
+    sampling — per-request key streams make the draw independent of batch
+    composition, and the vmapped decode is bit-identical per slot."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+
+    def reqs():
+        return _mk_requests(cfg, 6, max_new=5, sampling=sampling, seed=7)
+
+    batched = _serve(cfg, params, reqs(), slots=4)
+    sequential = _serve(cfg, params, reqs(), slots=1)
+    assert batched == sequential
+
+
+def test_mixed_sampling_params_in_one_batch():
+    """Slots may mix greedy and different temperatures; each request keeps
+    the stream it would have gotten alone in the engine."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    kinds = [SamplingParams(greedy=True), SamplingParams(temperature=3.0),
+             SamplingParams(temperature=0.5, top_k=4), None]
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, 5) for _ in kinds]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=5, sampling=k)
+                for i, (p, k) in enumerate(zip(prompts, kinds))]
+
+    mixed = _serve(cfg, params, reqs(), slots=4)
+    alone = [_serve(cfg, params, [r], slots=1)[0] for r in reqs()]
+    assert mixed == alone
+
+
+def test_stack_insert_take_slot_roundtrip():
+    cfg = _cfg()
+    caches = [tf.init_cache(cfg, 1, 16, jnp.float32) for _ in range(3)]
+    caches[1] = jax.tree.map(lambda a: a + 1.0 if a.dtype == jnp.float32
+                             else a + 1, caches[1])
+    stacked = tf.stack_caches(caches)
+    for i, c in enumerate(caches):
+        got = tf.take_slot(stacked, i)
+        assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(c)))
+    stacked2 = tf.insert_slot(stacked, caches[1], 2)
+    got = tf.take_slot(stacked2, 2)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree.leaves(got),
+                               jax.tree.leaves(caches[1])))
