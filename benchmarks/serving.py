@@ -1,18 +1,30 @@
-"""Serving throughput benchmark: decode tok/s vs slot count.
+"""Serving throughput benchmark + regression gate: decode tok/s vs slot
+count, dense and paged KV side by side.
 
-The ServeEngine issues exactly one jitted vmapped decode per step, so slot
-count should buy near-linear decode throughput on dispatch-bound hosts (the
-old engine looped one jitted call per slot — slots bought nothing). This
-benchmark measures it instead of asserting it: steady-state decode tok/s at
-slots in {1, 4, 8}, every configuration serving the same request workload
-per slot, written to BENCH_serving.json:
+The ServeEngine issues exactly one jitted decode per step, so slot count
+should buy near-linear decode throughput on dispatch-bound hosts; the paged
+engine must deliver the same tokens from a block pool instead of dense
+per-slot buffers without giving that throughput back. This benchmark
+measures both and **fails the build** when they regress: steady-state
+decode tok/s at slots in {1, 4, 8} for each kv_impl, every configuration
+serving the same request workload per slot, written to BENCH_serving.json:
 
-    {"slots": {"1": {"tok_s": ..., ...}, "4": ..., "8": ...},
-     "monotone": true, ...}
+    {"impls": {"dense": {"slots": {"1": {"tok_s": ...}, ...}, ...},
+               "paged": {..., "pool": {"peak_blocks": ...}}}, ...}
 
-CLI: ``python benchmarks/serving.py --smoke [--out BENCH_serving.json]``
-uses a smaller model + shorter generations for CI. Timing excludes compile:
-a warm-up engine run compiles prefill + decode before the measured pass.
+Like benchmarks/accuracy.py, the gate is a hard CI failure, not a record:
+every metric in BASELINES must be present (a renamed metric must not
+silently disable its gate) and must stay above
+``max(FLOOR_TOK_S, baseline * (1 - TOLERANCE))``. Baselines are this
+revision's smoke numbers on a dev host; the tolerance absorbs CI-runner
+noise while still catching a serialized decode loop or a paged gather
+going quadratic (both are >2x collapses, far past any plausible jitter).
+
+CLI: ``python benchmarks/serving.py --smoke [--out BENCH_serving.json]
+[--no-check]`` — smoke uses a smaller model + shorter generations for CI.
+Timing excludes compile: a warm-up pass on the *same* engine compiles
+prefill + decode before the measured pass (jit caches are per-engine, so a
+throwaway warm-up engine would not help).
 """
 from __future__ import annotations
 
@@ -32,6 +44,33 @@ from repro.serve.engine import Request, ServeEngine
 from repro.serve.sampling import SamplingParams
 
 SLOT_COUNTS = (1, 4, 8)
+KV_IMPLS = ("dense", "paged")
+
+#: Smoke-mode tok/s baselines for this revision (idle dev host, CPU). The
+#: gate fails a metric below max(FLOOR_TOK_S, baseline * (1 - TOLERANCE))
+#: and fails outright when a metric disappears from the results. Absolute
+#: tok/s scales with the runner, so the tolerance is wide; the
+#: host-invariant teeth are the speedup ratios below.
+BASELINES = {
+    "dense/1": 168.0,
+    "dense/4": 570.0,
+    "dense/8": 615.0,
+    "paged/1": 210.0,
+    "paged/4": 484.0,
+    "paged/8": 679.0,
+}
+TOLERANCE = 0.9         # absolute tok/s soaks up runner-class differences
+                        # (a 2-vCPU CI box can be ~5x slower than the dev
+                        # host); the collapse classes these still catch —
+                        # compile-in-measurement, quadratic gathers — are
+                        # >20x, and serialization is caught host-invariantly
+                        # by the speedup-ratio gate below
+FLOOR_TOK_S = 2.0       # below this the serving loop is broken, not slow
+#: 8 slots must beat 1 slot by at least this factor per impl — a RATIO, so
+#: it holds on any host speed. One decode dispatch per step buys ~3.5-4x
+#: here; a relapse to per-slot dispatch (or a paged gather going quadratic
+#: in slots) collapses it to ~1 and fails regardless of runner class.
+MIN_SPEEDUP_8_OVER_1 = 1.5
 
 
 def _cfg(smoke: bool) -> ModelConfig:
@@ -51,7 +90,7 @@ def _cfg(smoke: bool) -> ModelConfig:
 
 
 def _requests(cfg, n: int, max_new: int, plen: int = 8):
-    # fixed prompt length: one prefill compile, decode dominates the timing
+    # fixed prompt length: one prefill bucket, decode dominates the timing
     rng = np.random.default_rng(0)
     return [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
@@ -59,10 +98,13 @@ def _requests(cfg, n: int, max_new: int, plen: int = 8):
             for i in range(n)]
 
 
-def _serve_once(cfg, params, slots: int, *, requests_per_slot: int,
-                max_new: int, sampling: SamplingParams):
-    eng = ServeEngine(cfg, params, slots=slots, max_len=64, sampling=sampling)
-    reqs = _requests(cfg, slots * requests_per_slot, max_new)
+def _serve_once(eng, cfg, *, requests_per_slot: int, max_new: int):
+    """One timed serve pass on an existing engine. The warm-up and the
+    measured pass MUST share the engine: each ServeEngine wraps its own
+    jax.jit objects (that per-instance cache is what compile_counts()
+    measures), so a throwaway warm-up engine would leave every compile
+    inside the measured wall time."""
+    reqs = _requests(cfg, eng.slots * requests_per_slot, max_new)
     for r in reqs:
         eng.submit(r)
     t0 = time.perf_counter()
@@ -82,54 +124,104 @@ def bench(smoke: bool) -> dict:
     max_new = 8 if smoke else 32
     sampling = SamplingParams(greedy=True)
 
-    per_slots = {}
-    for slots in SLOT_COUNTS:
-        # warm-up pass compiles prefill + the batched decode for this slot
-        # count; the measured pass then times steady-state serving only
-        _serve_once(cfg, params, slots, requests_per_slot=1, max_new=2,
-                    sampling=sampling)
-        toks, steps, wall = _serve_once(
-            cfg, params, slots, requests_per_slot=requests_per_slot,
-            max_new=max_new, sampling=sampling)
-        per_slots[str(slots)] = {
-            "tok_s": round(toks / wall, 2),
-            "tokens": toks,
-            "engine_steps": steps,
-            "decode_dispatches": steps,
-            "wall_s": round(wall, 3),
-        }
-        print(f"[serving] slots={slots}: {toks} tok / {steps} steps / "
-              f"{wall:.2f}s = {toks / wall:.1f} tok/s")
+    impls = {}
+    for kv_impl in KV_IMPLS:
+        per_slots = {}
+        pool = None
+        for slots in SLOT_COUNTS:
+            eng = ServeEngine(cfg, params, slots=slots, max_len=64,
+                              sampling=sampling, kv_impl=kv_impl)
+            # warm-up pass compiles prefill + the batched decode for this
+            # slot count; the measured pass then times steady-state serving
+            _serve_once(eng, cfg, requests_per_slot=1, max_new=2)
+            toks, steps, wall = _serve_once(
+                eng, cfg, requests_per_slot=requests_per_slot,
+                max_new=max_new)
+            per_slots[str(slots)] = {
+                "tok_s": round(toks / wall, 2),
+                "tokens": toks,
+                "engine_steps": steps,
+                "decode_dispatches": steps,
+                "wall_s": round(wall, 3),
+            }
+            if eng.pager is not None:
+                st = eng.pager.stats()
+                pool = {"block_len": eng.block_len,
+                        "num_blocks": st.num_blocks,
+                        "peak_blocks": st.peak_in_use,
+                        "dense_equiv_blocks": slots * eng.max_blocks}
+            print(f"[serving] kv={kv_impl} slots={slots}: {toks} tok / "
+                  f"{steps} steps / {wall:.2f}s = {toks / wall:.1f} tok/s")
 
-    rates = [per_slots[str(s)]["tok_s"] for s in SLOT_COUNTS]
+        rates = [per_slots[str(s)]["tok_s"] for s in SLOT_COUNTS]
+        impls[kv_impl] = {
+            "slots": per_slots,
+            "monotone": all(a < b for a, b in zip(rates, rates[1:])),
+            "speedup_8_over_1": round(rates[-1] / rates[0], 2),
+        }
+        if pool is not None:
+            impls[kv_impl]["pool"] = pool
+
     return {
         "model": cfg.name,
         "mode": "smoke" if smoke else "full",
         "slot_counts": list(SLOT_COUNTS),
-        "slots": per_slots,
-        "monotone": all(a < b for a, b in zip(rates, rates[1:])),
-        "speedup_8_over_1": round(rates[-1] / rates[0], 2),
+        "kv_impls": list(KV_IMPLS),
+        "impls": impls,
     }
+
+
+def check_thresholds(res: dict) -> list:
+    """Returns [(metric, value, limit)] for every regressed metric; a
+    BASELINES key missing from the results is itself a failure."""
+    bad = []
+    for key in sorted(BASELINES):
+        impl, slots = key.split("/")
+        limit = max(FLOOR_TOK_S, BASELINES[key] * (1.0 - TOLERANCE))
+        try:
+            value = res["impls"][impl]["slots"][slots]["tok_s"]
+        except KeyError:
+            bad.append((key, float("nan"), limit))
+            continue
+        if value < limit:
+            bad.append((key, value, limit))
+    for impl in KV_IMPLS:
+        key = f"{impl}/speedup_8_over_1"
+        try:
+            value = res["impls"][impl]["speedup_8_over_1"]
+        except KeyError:
+            bad.append((key, float("nan"), MIN_SPEEDUP_8_OVER_1))
+            continue
+        if value < MIN_SPEEDUP_8_OVER_1:
+            bad.append((key, value, MIN_SPEEDUP_8_OVER_1))
+    return bad
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="BENCH_serving.json")
-    ap.add_argument("--check-monotone", action="store_true",
-                    help="exit non-zero unless tok/s strictly improves with "
-                         "slot count (off by default: CI hosts are noisy)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="record only; skip the regression-threshold gate")
     args = ap.parse_args(argv)
 
     res = bench(args.smoke)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
-    print(f"[serving] wrote {args.out}: "
-          f"{json.dumps({k: v['tok_s'] for k, v in res['slots'].items()})} "
-          f"tok/s, x{res['speedup_8_over_1']} at 8 slots")
-    if args.check_monotone and not res["monotone"]:
-        print("[serving] FAIL: tok/s not monotone in slot count", file=sys.stderr)
-        return 1
+    for impl in KV_IMPLS:
+        r = res["impls"][impl]
+        print(f"[serving] {impl}: "
+              f"{json.dumps({k: v['tok_s'] for k, v in r['slots'].items()})} "
+              f"tok/s, x{r['speedup_8_over_1']} at 8 slots")
+    print(f"[serving] wrote {args.out}")
+
+    if not args.no_check and res["mode"] == "smoke":
+        bad = check_thresholds(res)
+        if bad:
+            for name, value, limit in bad:
+                print(f"SERVING REGRESSION: {name} = {value:.6g} tok/s "
+                      f"< threshold {limit:.6g}", file=sys.stderr)
+            return 1
     return 0
 
 

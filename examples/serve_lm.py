@@ -5,9 +5,12 @@
 
 Loads a small GQA LM (optionally from a train_lm.py checkpoint), submits a
 queue of prompt requests, and serves them through the slot-based engine:
-per-slot prefill into a *stacked* (slots, ...) cache tree, then one jitted
-vmapped decode call per engine step for all slots at once — slots refilled
-from the queue as requests finish. Sampling runs on the CORDIC datapath
+bucket-padded prefill per admission (compiles bounded by the bucket count,
+not by distinct prompt lengths), then one jitted decode call per engine
+step for all slots at once — slots refilled from the queue as requests
+finish. ``--kv-impl paged`` swaps the per-slot dense caches for a global
+block pool with per-slot block tables (serve/kv_pager.py); emitted tokens
+are bit-identical either way. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
@@ -38,6 +41,11 @@ def main():
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k filtering; 0 = full vocab")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-impl", default="dense", choices=["dense", "paged"],
+                    help="decode KV layout: dense per-slot buffers or the "
+                         "paged global block pool (bit-identical tokens)")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="positions per KV block / prefill bucket granularity")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -48,13 +56,14 @@ def main():
     )
     print(f"[serve_lm] model {cfg.param_counts()['total'] / 1e6:.1f}M params, "
           f"act_impl={cfg.act_impl}, slots={args.slots}, "
-          f"T={args.temperature}, top_k={args.top_k}")
+          f"kv_impl={args.kv_impl}, T={args.temperature}, top_k={args.top_k}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
 
     # temperature <= 0 resolves to greedy inside SamplingParams
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
-                      sampling=sampling, seed=args.seed)
+                      sampling=sampling, seed=args.seed,
+                      kv_impl=args.kv_impl, block_len=args.block_len)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -74,6 +83,11 @@ def main():
     print(f"[serve_lm] served {len(done)} requests / {total_new} tokens in "
           f"{steps} engine steps ({steps} batched decode dispatches), "
           f"{wall:.1f}s ({total_new / wall:.1f} tok/s on host CPU)")
+    if eng.pager is not None:
+        st = eng.pager.stats()
+        print(f"[serve_lm] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
+              f"blocks x {eng.block_len} positions "
+              f"(dense would pin {args.slots * 128 // eng.block_len})")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> out={r.out}")
     assert all(r.done for r in reqs)

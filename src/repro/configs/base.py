@@ -82,6 +82,13 @@ class ModelConfig:
                                          # backward pass is always the
                                          # analytic softmax - onehot form
     attn_chunk: int = 1024
+    kv_impl: str = "dense"               # dense | paged: decode KV layout —
+                                         # one max_len buffer per slot vs a
+                                         # global block pool + per-slot block
+                                         # tables (serve/kv_pager.py); decode
+                                         # output is bit-identical either way
+    kv_block_len: int = 16               # positions per KV block (paged) and
+                                         # the prefill-bucket granularity
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None
     ssm: Optional[SSMConfig] = None

@@ -33,6 +33,14 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (CORDIC datapath); 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--kv-impl", default="dense", choices=["dense", "paged"],
+                    help="decode KV layout: dense per-slot buffers or the "
+                         "global block pool (serve/kv_pager.py)")
+    ap.add_argument("--block-len", type=int, default=16,
+                    help="positions per KV block / prefill bucket granularity")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size incl. scratch (0 = worst-case "
+                         "slots*max_len/block_len + 1)")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch, act_impl=args.act_impl) if args.smoke
@@ -41,12 +49,14 @@ def main(argv=None):
         import dataclasses
 
         cfg = dataclasses.replace(cfg, input_mode="tokens")
-    print(f"[serve] arch={cfg.name} slots={args.slots}")
+    print(f"[serve] arch={cfg.name} slots={args.slots} kv={args.kv_impl}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
     # temperature <= 0 resolves to greedy inside SamplingParams
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
-                      sampling=sampling)
+                      sampling=sampling, kv_impl=args.kv_impl,
+                      block_len=args.block_len,
+                      num_blocks=args.num_blocks or None)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -60,6 +70,11 @@ def main(argv=None):
     total = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {total} tokens, "
           f"{time.time() - t0:.1f}s")
+    if eng.pager is not None:
+        st = eng.pager.stats()
+        print(f"[serve] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
+              f"blocks x {eng.block_len} positions, "
+              f"{st.allocs} allocs, {st.alloc_failures} backpressure waits")
     assert len(done) == args.requests
     return 0
 

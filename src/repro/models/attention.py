@@ -110,6 +110,81 @@ def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV plumbing (kv_impl="paged"): a global block pool per layer plus
+# per-slot block tables. Host-side allocation lives in serve/kv_pager.py;
+# this is the device side — block-granular writes, table gathers, and a
+# per-row-positioned attend that is bit-identical to the dense path.
+# ---------------------------------------------------------------------------
+def _pool_write(pool, tables, lens, new):
+    """Write ``S`` new positions per batch row into the block pool.
+
+    pool: (N, L, *f)  tables: (B, M) int32  lens: (B,) int32  new: (B, S, *f).
+
+    S == 1      — decode: one scattered element per row at logical position
+                  ``lens`` (block ``tables[b, lens//L]``, offset ``lens%L``).
+                  Vacant slots carry an all-zero table, so their garbage
+                  write lands in the reserved scratch block 0.
+    S % L == 0  — block-aligned prefill from position 0 (the engine admits
+                  into an empty slot, so ``lens`` is 0): whole blocks are
+                  scattered through the first S/L table entries.
+    """
+    B, S = new.shape[:2]
+    L = pool.shape[1]
+    if S == 1:
+        blk = jnp.take_along_axis(tables, (lens // L)[:, None], axis=1,
+                                  mode="clip")[:, 0]
+        return pool.at[blk, lens % L].set(new[:, 0].astype(pool.dtype))
+    assert S % L == 0, f"prefill width {S} not a multiple of block_len {L}"
+    nb = S // L
+    blocks = new.reshape((B * nb, L) + new.shape[2:]).astype(pool.dtype)
+    return pool.at[tables[:, :nb].reshape(-1)].set(blocks)
+
+
+def _pool_gather(pool, tables):
+    """Assemble each row's logical KV buffer from its block table:
+    (N, L, *f) pool + (B, M) tables -> (B, M*L, *f). Entries past the
+    slot's real length point at scratch/stale blocks and are masked by the
+    caller (zero softmax weight, so their values never contribute).
+
+    The gather spans the FULL table (M*L == max_len positions), trading
+    transient working set for exactness: the attend then runs over the
+    same shapes as the dense path, which is what keeps paged decode
+    bit-identical to dense. Paging therefore shrinks *resident* KV (the
+    pool) but not the per-step gather; a block-wise paged-attention
+    kernel that never materializes the gather is the ROADMAP follow-up."""
+    B, M = tables.shape
+    L = pool.shape[1]
+    return pool[tables].reshape((B, M * L) + pool.shape[2:])
+
+
+def _attend_rows(q, k, v, q_pos, k_len, scale, score_dtype: str = "f32",
+                 softmax_impl: str = "exact"):
+    """_attend_block with per-batch-row positions: q: (B,S,KH,G,D),
+    k/v: (B,T,KH,Dv), q_pos: (B,S) absolute query positions, k_len: (B,)
+    valid key counts. Identical einsum contractions to _attend_block —
+    only the mask gains a batch axis — so a paged decode step produces
+    bit-identical outputs to the dense (vmapped per-slot) decode."""
+    if score_dtype == "f32":
+        q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q32, k32) * scale
+    else:
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    T = k.shape[1]
+    k_pos = jnp.arange(T)
+    mask = ((k_pos[None, None, :] < k_len[:, None, None])
+            & (k_pos[None, None, :] <= q_pos[:, :, None]))      # (B,S,T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)              # (B,h,g,S,T)
+    p = _softmax_fn(softmax_impl)(s, axis=-1)
+    if score_dtype == "f32":
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v32)
+    else:
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+    return o
+
+
+# ---------------------------------------------------------------------------
 # GQA
 # ---------------------------------------------------------------------------
 def _padded_heads(cfg):
@@ -161,6 +236,57 @@ def gqa_init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     }
 
 
+def gqa_init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
+                         max_blocks: int, dtype=jnp.bfloat16):
+    """Paged decode cache for one GQA layer: a global (num_blocks,
+    block_len, KH, hd) K/V pool shared by every slot, per-slot block
+    tables (slots, max_blocks) into it, and per-slot lengths. Block 0 is
+    the scratch block (kv_pager.SCRATCH_BLOCK): vacant slots point at it."""
+    _, KH = _padded_heads(cfg)
+    hd = cfg.head_dim
+    return {
+        "k_pool": jnp.zeros((num_blocks, block_len, KH, hd), dtype),
+        "v_pool": jnp.zeros((num_blocks, block_len, KH, hd), dtype),
+        "tables": jnp.zeros((slots, max_blocks), jnp.int32),
+        "lens": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
+    """Paged continuation of gqa_apply (cache holds a block pool).
+
+    Decode (S==1): every row writes its new K/V element through its block
+    table, then attends against the table-gathered (B, M*L, KH, hd) buffer
+    masked past the per-slot length. Prefill (S==bucket width, one row):
+    whole-block writes, then the same gather-and-attend — shape-identical
+    to the dense path's full-cache attend, which keeps logits bit-equal.
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    KH = k.shape[2]
+    G = q.shape[2] // KH
+    lens, tables = cache["lens"], cache["tables"]
+
+    positions = lens[:, None] + jnp.arange(S)[None, :]          # (B,S)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+
+    kp = _pool_write(cache["k_pool"], tables, lens, k)
+    vp = _pool_write(cache["v_pool"], tables, lens, v)
+    k_full = _pool_gather(kp, tables).astype(x.dtype)
+    v_full = _pool_gather(vp, tables).astype(x.dtype)
+
+    qg = q.reshape(B, S, KH, G, hd)
+    o = _attend_rows(qg, k_full, v_full, positions, lens + S,
+                     1.0 / np.sqrt(hd), cfg.score_dtype,
+                     getattr(cfg, "softmax_impl", "exact"))
+    o = o.astype(qg.dtype).reshape(B, S, KH * G, hd)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    new_cache = {"k_pool": kp, "v_pool": vp, "tables": tables,
+                 "lens": lens + S}
+    return y, new_cache
+
+
 def gqa_apply(params, x, cfg, *, cache: Optional[dict] = None,
               positions: Optional[jax.Array] = None) -> Tuple[jax.Array, Optional[dict]]:
     """x: (B,S,d). With cache: writes S new positions at cache['idx']."""
@@ -182,6 +308,9 @@ def gqa_apply(params, x, cfg, *, cache: Optional[dict] = None,
         q = q + params["bq"].astype(x.dtype)
         k = k + params["bk"].astype(x.dtype)
         v = v + params["bv"].astype(x.dtype)
+
+    if cache is not None and "k_pool" in cache:
+        return _gqa_paged_apply(params, x, cfg, cache, q, k, v)
 
     if positions is None:
         offset = cache["idx"] if cache is not None else 0
@@ -262,12 +391,120 @@ def _mla_compress(params, x, cfg, positions):
     return c_kv, k_rope
 
 
+def mla_init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
+                         max_blocks: int, dtype=jnp.bfloat16):
+    """Paged decode cache for one MLA layer: global block pools over the
+    *compressed* latent (c_kv) and the shared rope key, plus per-slot
+    block tables/lengths (layout mirrors gqa_init_paged_cache)."""
+    m = cfg.mla
+    return {
+        "c_kv_pool": jnp.zeros((num_blocks, block_len, m.kv_lora_rank), dtype),
+        "k_rope_pool": jnp.zeros((num_blocks, block_len, m.qk_rope_dim), dtype),
+        "tables": jnp.zeros((slots, max_blocks), jnp.int32),
+        "lens": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def _mla_absorbed_decode(q_nope, q_rope, cc, cr, wk_b, wv_b, scale, valid,
+                         score_dtype, softmax_impl):
+    """Absorbed-form single-query MLA decode against a compressed buffer:
+    q_nope/q_rope (B,1,H,·), cc/cr (B,T,·), ``valid`` broadcastable to the
+    (B,H,1,T) score mask. One implementation shared by the dense and paged
+    branches — only the mask differs — so the two stay bit-identical by
+    construction. Returns o (B,1,H,v_dim) in f32."""
+    q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)          # (B,1,H,L)
+    if score_dtype == "f32":
+        s = (jnp.einsum("bshl,btl->bhst", q_eff.astype(jnp.float32),
+                        cc.astype(jnp.float32))
+             + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                          cr.astype(jnp.float32))) * scale
+    else:
+        s = (jnp.einsum("bshl,btl->bhst", q_eff, cc.astype(q_eff.dtype),
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(q_rope.dtype),
+                          preferred_element_type=jnp.float32)) * scale
+    s = jnp.where(valid, s, NEG_INF)
+    p = _softmax_fn(softmax_impl)(s, axis=-1)
+    if score_dtype == "f32":
+        o_lat = jnp.einsum("bhst,btl->bshl", p, cc.astype(jnp.float32))
+    else:
+        o_lat = jnp.einsum("bhst,btl->bshl", p.astype(cc.dtype), cc,
+                           preferred_element_type=jnp.float32)
+    return jnp.einsum("bshl,lhv->bshv", o_lat, wv_b.astype(jnp.float32))
+
+
+def _mla_decompress_kq(q_nope, q_rope, cc, cr, m, H, wk_b, wv_b):
+    """Decompress a (compressed-latent, rope-key) buffer into full k/v and
+    build the grouped query for the chunked/row attends — the prefill
+    counterpart of _mla_absorbed_decode, shared by the dense and paged
+    branches so the two stay bit-identical by construction."""
+    dtype = q_nope.dtype
+    B, T = cc.shape[:2]
+    S = q_nope.shape[1]
+    k_nope = jnp.einsum("btl,lhk->bthk", cc.astype(dtype), wk_b)
+    v = jnp.einsum("btl,lhv->bthv", cc.astype(dtype), wv_b)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(cr[:, :, None, :].astype(dtype),
+                                  (B, T, H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, jnp.broadcast_to(
+        q_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    qg = q.reshape(B, S, H, 1, m.qk_nope_dim + m.qk_rope_dim)
+    return k, v, qg
+
+
+def _mla_paged_apply(params, x, cfg, cache):
+    """Paged MLA: block-pool writes of the compressed latent + rope key,
+    then absorbed decode (S==1) or decompress-and-attend prefill against
+    the table-gathered buffer, masked past each row's length. Einsums
+    mirror the dense branches exactly (bit-identical decode)."""
+    B, S, d = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    lens, tables = cache["lens"], cache["tables"]
+    positions = lens[:, None] + jnp.arange(S)[None, :]
+
+    q_nope, q_rope = _mla_project_q(params, x, cfg, positions)
+    c_kv, k_rope = _mla_compress(params, x, cfg, positions)
+
+    cp = _pool_write(cache["c_kv_pool"], tables, lens, c_kv)
+    rp = _pool_write(cache["k_rope_pool"], tables, lens, k_rope)
+    cc = _pool_gather(cp, tables)                               # (B,T,R)
+    cr = _pool_gather(rp, tables)                               # (B,T,rope)
+    T = cc.shape[1]
+
+    wkv_b = params["wkv_b"].astype(x.dtype)
+    wk_b, wv_b = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    k_len = lens + S
+
+    if S == 1:
+        # Absorbed decode against the gathered buffer; per-row valid mask.
+        valid = (jnp.arange(T)[None, :] < k_len[:, None])[:, None, None, :]
+        o = _mla_absorbed_decode(q_nope, q_rope, cc, cr, wk_b, wv_b, scale,
+                                 valid, cfg.score_dtype,
+                                 getattr(cfg, "softmax_impl", "exact"))
+    else:
+        # Prefill: decompress the gathered buffer, per-row-positioned attend.
+        k, v, qg = _mla_decompress_kq(q_nope, q_rope, cc, cr, m, H,
+                                      wk_b, wv_b)
+        o = _attend_rows(qg, k, v, positions, k_len, scale,
+                         softmax_impl=getattr(cfg, "softmax_impl", "exact"))
+        o = o.astype(qg.dtype).reshape(B, S, H, m.v_dim)
+
+    y = jnp.einsum("bshv,hvd->bsd", o.astype(x.dtype), params["wo"].astype(x.dtype))
+    new_cache = {"c_kv_pool": cp, "k_rope_pool": rp, "tables": tables,
+                 "lens": k_len}
+    return y, new_cache
+
+
 def mla_apply(params, x, cfg, *, cache: Optional[dict] = None,
               positions: Optional[jax.Array] = None):
     """MLA attention. Prefill decompresses K/V per chunk; decode uses the
-    absorbed form against the compressed cache."""
+    absorbed form against the compressed cache. A paged cache (block pool
+    + tables, see mla_init_paged_cache) takes the paged path instead."""
     B, S, d = x.shape
     m, H = cfg.mla, cfg.num_heads
+    if cache is not None and "c_kv_pool" in cache:
+        return _mla_paged_apply(params, x, cfg, cache)
     offset = cache["idx"] if cache is not None else 0
     if positions is None:
         positions = offset + jnp.arange(S)[None, :]
@@ -298,40 +535,16 @@ def mla_apply(params, x, cfg, *, cache: Optional[dict] = None,
     if cache is not None and S == 1:
         # Absorbed decode: score against the compressed cache directly.
         T = cc.shape[1]
-        q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)          # (B,1,H,L)
-        if cfg.score_dtype == "f32":
-            s = (jnp.einsum("bshl,btl->bhst", q_eff.astype(jnp.float32),
-                            cc.astype(jnp.float32))
-                 + jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
-                              cr.astype(jnp.float32))) * scale
-        else:
-            s = (jnp.einsum("bshl,btl->bhst", q_eff, cc.astype(q_eff.dtype),
-                            preferred_element_type=jnp.float32)
-                 + jnp.einsum("bshk,btk->bhst", q_rope, cr.astype(q_rope.dtype),
-                              preferred_element_type=jnp.float32)) * scale
-        k_len = cache["idx"] + 1
-        valid = (jnp.arange(T) < k_len)[None, None, None, :]
-        s = jnp.where(valid, s, NEG_INF)
-        p = _softmax_fn(getattr(cfg, "softmax_impl", "exact"))(s, axis=-1)
-        if cfg.score_dtype == "f32":
-            o_lat = jnp.einsum("bhst,btl->bshl", p, cc.astype(jnp.float32))
-        else:
-            o_lat = jnp.einsum("bhst,btl->bshl", p.astype(cc.dtype), cc,
-                               preferred_element_type=jnp.float32)
-        o = jnp.einsum("bshl,lhv->bshv", o_lat, wv_b.astype(jnp.float32))
+        valid = (jnp.arange(T) < cache["idx"] + 1)[None, None, None, :]
+        o = _mla_absorbed_decode(q_nope, q_rope, cc, cr, wk_b, wv_b, scale,
+                                 valid, cfg.score_dtype,
+                                 getattr(cfg, "softmax_impl", "exact"))
     else:
         # Prefill / train: decompress K,V and run the chunked causal core.
         src_c = cc if cache is not None else c_kv
         src_r = cr if cache is not None else k_rope
-        T = src_c.shape[1]
-        k_nope = jnp.einsum("btl,lhk->bthk", src_c.astype(x.dtype), wk_b)
-        v = jnp.einsum("btl,lhv->bthv", src_c.astype(x.dtype), wv_b)
-        k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(src_r[:, :, None, :].astype(x.dtype),
-                                      (B, T, H, m.qk_rope_dim))], axis=-1)
-        q = jnp.concatenate([q_nope, jnp.broadcast_to(
-            q_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
-        qg = q.reshape(B, S, H, 1, m.qk_nope_dim + m.qk_rope_dim)
+        k, v, qg = _mla_decompress_kq(q_nope, q_rope, src_c, src_r, m, H,
+                                      wk_b, wv_b)
         k_len = (cache["idx"] + S) if cache is not None else None
         o = causal_attention(qg, k, v, q_offset=offset, k_len=k_len,
                              chunk=cfg.attn_chunk,

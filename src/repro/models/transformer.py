@@ -232,6 +232,141 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return cache
 
 
+# ---------------------------------------------------------------------------
+# Paged decode caches (cfg.kv_impl == "paged")
+# ---------------------------------------------------------------------------
+#: Attention block types that own a paged-cache variant. Recurrent families
+#: (mamba2 / mlstm / slstm) keep their O(1) per-slot state — paging a
+#: constant-size state buys nothing, so they use their ordinary batch cache.
+PAGED_CACHE_FNS = {
+    "dense": attn.gqa_init_paged_cache,
+    "gqa_moe": attn.gqa_init_paged_cache,
+    "mla_dense": attn.mla_init_paged_cache,
+    "mla_moe": attn.mla_init_paged_cache,
+}
+
+
+def _is_pool_leaf(path) -> bool:
+    key = getattr(path[-1], "key", None)
+    return isinstance(key, str) and key.endswith("_pool")
+
+
+def init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
+                     max_blocks: int, dtype=jnp.bfloat16):
+    """Engine-level decode cache for ``kv_impl="paged"``.
+
+    Unlike the dense scheme (one per-request cache per slot, stacked by
+    stack_caches), this tree is built once for all slots: attention
+    segments hold a *global* block pool per layer plus per-slot block
+    tables/lengths, and recurrent segments hold their usual (slots, ...)
+    batch state. Decode is a single batch-``slots`` apply — no vmap, the
+    pool is shared — and admission writes one slot through
+    paged_slot_view / paged_slot_merge.
+    """
+    assert cfg.shared_block is None, \
+        "paged KV does not support shared-block (zamba2-style) configs yet"
+    cache: Dict[str, Any] = {}
+    for item, payload in execution_plan(cfg):
+        seg_idx, blk, count = payload
+        if blk in PAGED_CACHE_FNS:
+            one = PAGED_CACHE_FNS[blk](cfg, slots, num_blocks, block_len,
+                                       max_blocks, dtype)
+        else:
+            one = BLOCKS[blk][2](cfg, slots, 1, dtype)
+        if count > 1:
+            one = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+        cache[f"seg{seg_idx}"] = one
+    return cache
+
+
+def _paged_seg_iter(cfg, cache):
+    """Yields (seg_key, block_type, count, per_slot_axis, seg_cache)."""
+    for item, payload in execution_plan(cfg):
+        seg_idx, blk, count = payload
+        key = f"seg{seg_idx}"
+        yield key, blk, count, (1 if count > 1 else 0), cache[key]
+
+
+def paged_slot_view(cfg, cache, slot) -> Any:
+    """Batch-1 view of one slot of a paged cache tree (admission prefill).
+
+    Pool leaves are passed whole (prefill writes blocks into the global
+    pool); per-slot leaves (tables, lens, recurrent state) are sliced to
+    the slot's row — except recurrent state, which is rebuilt *fresh*: an
+    admitted request must not see the previous occupant's state.
+    """
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        if blk in PAGED_CACHE_FNS:
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda p, leaf, a=axis: leaf if _is_pool_leaf(p) else
+                jax.lax.dynamic_slice_in_dim(leaf, slot, 1, a), seg)
+        else:
+            one = BLOCKS[blk][2](cfg, 1, 1, jnp.float32)
+            if count > 1:
+                one = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+            out[key] = jax.tree.map(lambda f, old: f.astype(old.dtype),
+                                    one, seg)
+    return out
+
+
+def paged_slot_merge(cfg, cache, view, slot) -> Any:
+    """Write an updated batch-1 view (from paged_slot_view + apply) back:
+    pools replace the global pools, per-slot rows land in row ``slot``."""
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        vseg = view[key]
+        if blk in PAGED_CACHE_FNS:
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda p, full, one, a=axis: one if _is_pool_leaf(p) else
+                jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, a), seg, vseg)
+        else:
+            out[key] = jax.tree.map(
+                lambda full, one, a=axis: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, a), seg, vseg)
+    return out
+
+
+def paged_set_slot(cfg, cache, slot, table_row, length) -> Any:
+    """Set one slot's block-table row + length across every attention
+    segment (admission binds freshly allocated blocks; release resets the
+    row to scratch-block zeros so the vacant slot cannot scribble on
+    blocks that get reallocated)."""
+    def f(p, leaf, count):
+        key = getattr(p[-1], "key", None)
+        if key == "tables":
+            return (leaf.at[:, slot, :].set(table_row) if count > 1
+                    else leaf.at[slot, :].set(table_row))
+        if key == "lens":
+            return (leaf.at[:, slot].set(length) if count > 1
+                    else leaf.at[slot].set(length))
+        return leaf
+
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        if blk in PAGED_CACHE_FNS:
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda p, leaf, c=count: f(p, leaf, c), seg)
+        else:
+            out[key] = seg
+    return out
+
+
+def override_cache_length(cache, length) -> Any:
+    """Force every position counter ('idx' dense / 'lens' paged) to
+    ``length``. Bucketed prefill pads the prompt to a bucket width, so the
+    position the cache advanced to overstates the real sequence length;
+    the engine pins it back before decoding."""
+    def f(p, leaf):
+        if getattr(p[-1], "key", None) in ("idx", "lens"):
+            return jnp.full_like(leaf, length)
+        return leaf
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
 def stack_caches(caches: List[Any]) -> Any:
     """Stack per-request decode caches into one (slots, ...) pytree.
 

@@ -1,22 +1,41 @@
-"""Batched serving engine: prefill + decode steps and a slot-based
-continuous-batching loop.
+"""Batched serving engine: bucketed prefill + decode steps and a slot-based
+continuous-batching loop over a dense or *paged* KV memory plane.
 
 `make_prefill_step`/`make_decode_step` are the functions the dry-run lowers
 for the decode shapes (decode_32k / long_500k): one new token against a KV /
 recurrent-state cache.
 
 `ServeEngine` packs requests into fixed batch slots and refills them as
-sequences finish (continuous batching at step granularity). The per-slot KV /
-recurrent caches are *stacked* into one (slots, ...) pytree
-(models.transformer.stack_caches), so every engine step issues exactly one
-jitted decode call — a vmap over the slot axis — regardless of how many
-slots are active; per-slot sequence positions live in the stacked ``idx``
-leaves. Sampling (serve.sampling) is per-slot: each request carries its own
+sequences finish (continuous batching at step granularity). Every engine
+step issues exactly one jitted decode call regardless of occupancy; the KV
+layout behind it is selected by ``cfg.kv_impl``:
+
+``dense``  — one max_len K/V buffer per slot, stacked into a (slots, ...)
+    pytree (models.transformer.stack_caches) and decoded as a vmap over the
+    slot axis. Memory is slots x max_len whatever the real lengths are.
+``paged``  — a global pool of ``block_len``-position KV blocks per layer
+    (models.attention.*_init_paged_cache) with per-slot block tables, host
+    allocation in serve.kv_pager.KVPager. Admission allocates just the
+    blocks a request can reach (bucketed prompt + max_new_tokens) and frees
+    them the step it finishes, so memory follows the *actual* traffic;
+    a request that does not fit stays queued (backpressure) instead of
+    crashing. Decode gathers each slot's blocks through its table and masks
+    past the per-slot length — bit-identical tokens to the dense path
+    (greedy and seeded sampling), CI-enforced.
+
+Admission prefills are *bucketed*: prompts are padded to a small geometric
+set of lengths (serve.kv_pager.bucket_lengths, 16/32/.../max_len) with the
+real length masked back in (`transformer.override_cache_length`), so
+serving N distinct prompt lengths compiles at most len(buckets) prefills —
+not N — plus exactly two decode variants (argmax-only and sampling).
+Bucketing (and with it the paged plane) is attention-family only: a
+recurrent scan has no causal mask to hide a pad tail, so mamba/xlstm archs
+prefill at exact length on the dense plane, exactly as before.
+Sampling (serve.sampling) stays per-slot: each request carries its own
 SamplingParams, temperature scaling runs through the CORDIC linear-rotation
 multiply by the R2-LVC reciprocal, and every request draws from its own rng
 key stream fold_in(fold_in(base, rid), t) — making the emitted tokens
-independent of slot placement and batch composition (bit-reproducible
-against a sequential decode of the same requests).
+independent of slot placement, batch composition, and KV layout.
 """
 from __future__ import annotations
 
@@ -28,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tf
+from repro.serve import kv_pager as kvp
 from repro.serve import sampling as sp
 from repro.serve.sampling import SamplingParams
 
@@ -36,6 +56,42 @@ def make_prefill_step(cfg):
     def prefill(params, cache, batch):
         logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
         return logits[:, -1], cache
+    return prefill
+
+
+def make_bucketed_prefill_step(cfg):
+    """Dense prefill over a bucket-padded prompt: the returned function
+    takes the *real* prompt length, hands back the logits at the last real
+    position, and pins the cache position counters to it — the pad tail is
+    causally invisible to that row and is overwritten by decode writes, so
+    padding never changes the emitted tokens. One compile per bucket width
+    instead of one per distinct prompt length."""
+    def prefill(params, cache, batch, true_len):
+        logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
+        cache = tf.override_cache_length(cache, true_len)
+        last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                            keepdims=False)
+        return last, cache
+    return prefill
+
+
+def make_paged_prefill_step(cfg):
+    """Admission prefill straight into pool blocks: binds the slot's block
+    table, runs the bucket-padded prefill through a batch-1 slot view
+    (fresh recurrent state, shared pools), writes the updated pools + slot
+    rows back, and pins the slot length to the real prompt length. No
+    dense max_len cache is materialized and nothing is copied at insert."""
+    def prefill(params, caches, tokens, slot, table_row, true_len):
+        caches = tf.paged_set_slot(cfg, caches, slot, table_row,
+                                   jnp.zeros((), jnp.int32))
+        view = tf.paged_slot_view(cfg, caches, slot)
+        logits, _, nview = tf.apply(params, {"tokens": tokens}, cfg,
+                                    cache=view)
+        nview = tf.override_cache_length(nview, true_len)
+        caches = tf.paged_slot_merge(cfg, caches, nview, slot)
+        last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                            keepdims=False)
+        return last, caches
     return prefill
 
 
@@ -64,8 +120,21 @@ def make_decode_step(cfg, *, greedy: bool = True, temperature: float = 1.0):
     return decode
 
 
+def _sample_step(last, rids, steps, temps, top_ks, greedy, base_key,
+                 greedy_only: bool):
+    """Shared tail of the batched decode variants: (S,V) last-position
+    logits -> (S,) next tokens. ``greedy_only`` compiles the argmax-only
+    datapath; greedy tokens are argmax of the raw logits in BOTH variants,
+    so which one runs never changes the output."""
+    if greedy_only:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    keys = jax.vmap(lambda r, t: sp.request_key(base_key, r, t))(rids, steps)
+    return sp.sample_batched(last, keys, temps, top_ks, greedy)
+
+
 def make_batched_decode_step(cfg, *, greedy_only: bool = False):
-    """One jitted decode for ALL slots: vmap over the stacked cache axis.
+    """One jitted decode for ALL slots of a *dense* stacked cache: vmap
+    over the stacked (slots, 1, ...) cache axis.
 
     Arguments of the returned function (S = slot count):
         params        — model params (broadcast across slots)
@@ -80,11 +149,6 @@ def make_batched_decode_step(cfg, *, greedy_only: bool = False):
     Returns ((S,) int32 next tokens, updated stacked caches). Inactive
     slots decode garbage tokens against their stale caches — the engine
     masks them on the host; their caches are re-prefilled at admission.
-
-    ``greedy_only`` compiles the argmax-only variant: an all-greedy batch
-    skips the sampling datapath (CORDIC temperature multiply, vocab sort,
-    categorical draw) entirely. Greedy tokens are argmax of the raw logits
-    in BOTH variants, so which one runs never changes the output.
     """
     def decode(params, caches, tokens, rids, steps, temps, top_ks, greedy,
                base_key):
@@ -94,12 +158,24 @@ def make_batched_decode_step(cfg, *, greedy_only: bool = False):
             return logits[0, -1], nc
 
         last, caches = jax.vmap(one)(caches, tokens)
-        if greedy_only:
-            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        else:
-            keys = jax.vmap(lambda r, t: sp.request_key(base_key, r, t))(rids,
-                                                                         steps)
-            nxt = sp.sample_batched(last, keys, temps, top_ks, greedy)
+        nxt = _sample_step(last, rids, steps, temps, top_ks, greedy,
+                           base_key, greedy_only)
+        return nxt, caches
+    return decode
+
+
+def make_paged_decode_step(cfg, *, greedy_only: bool = False):
+    """One jitted decode for ALL slots of a *paged* cache: a single
+    batch-``slots`` apply — the block pool is global, so there is no
+    per-slot cache axis to vmap; per-slot positions live in the cache's
+    ``lens`` leaves and each row attends its own table-gathered blocks.
+    Same signature and same emitted tokens as make_batched_decode_step."""
+    def decode(params, caches, tokens, rids, steps, temps, top_ks, greedy,
+               base_key):
+        logits, _, caches = tf.apply(params, {"tokens": tokens}, cfg,
+                                     cache=caches)
+        nxt = _sample_step(logits[:, -1], rids, steps, temps, top_ks, greedy,
+                           base_key, greedy_only)
         return nxt, caches
     return decode
 
@@ -136,16 +212,20 @@ class Request:
 
 
 class ServeEngine:
-    """Slot-based continuous batching on top of prefill + one batched decode.
+    """Slot-based continuous batching on top of bucketed prefill + one
+    batched decode, over a dense or paged KV plane (see module docstring).
 
-    Static batch of `slots`, all caches stacked into one (slots, ...) tree;
-    each slot holds one request and an active-slot mask tracks occupancy.
-    Admission prefills a fresh single-request cache and writes it into the
-    stack (insert_slot); every `step()` then advances ALL slots with exactly
-    one jitted vmapped decode call and appends the sampled token to each
-    active request. Finished slots are refilled from the queue between
-    steps. Per-request sampling params can mix greedy / temperature / top-k
-    within one batch (see serve.sampling).
+    Static batch of `slots`; each slot holds one request and an active-slot
+    mask tracks occupancy. Admission pads the prompt to a length bucket,
+    prefills it (into a fresh stacked-tree slot for ``dense``, straight
+    into freshly allocated pool blocks for ``paged``), and emits the first
+    token; every `step()` then advances ALL slots with exactly one jitted
+    decode call and appends the sampled token to each active request.
+    Finished slots release their blocks (paged) and are refilled from the
+    queue between steps, head-of-queue first — a head that does not fit
+    the pool blocks admission until something frees (FIFO backpressure).
+    Per-request sampling params can mix greedy / temperature / top-k within
+    one batch (see serve.sampling).
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 256,
@@ -153,43 +233,100 @@ class ServeEngine:
                  temperature: float = 1.0, seed: int = 0,
                  sampling: Optional[SamplingParams] = None,
                  softmax_impl: Optional[str] = None,
-                 loss_impl: Optional[str] = None):
+                 loss_impl: Optional[str] = None,
+                 kv_impl: Optional[str] = None,
+                 block_len: Optional[int] = None,
+                 num_blocks: Optional[int] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
         if softmax_impl is not None:
             cfg = dataclasses.replace(cfg, softmax_impl=softmax_impl)
         if loss_impl is not None:
             cfg = dataclasses.replace(cfg, loss_impl=loss_impl)
+        if kv_impl is not None:
+            cfg = dataclasses.replace(cfg, kv_impl=kv_impl)
+        if block_len is not None:
+            cfg = dataclasses.replace(cfg, kv_block_len=block_len)
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos = eos_token
+        self.kv_impl = getattr(cfg, "kv_impl", "dense")
+        self.block_len = getattr(cfg, "kv_block_len", 16)
+        if self.kv_impl not in ("dense", "paged"):
+            raise ValueError(f"unknown kv_impl {self.kv_impl!r}")
+        self.buckets = kvp.bucket_lengths(max_len, self.block_len)
+        # Bucket-pad prefills only for attention-cache families: causal
+        # attention makes the pad tail invisible to the last real position,
+        # but recurrent blocks (mamba2/xlstm) would fold pad tokens into
+        # their state. Recurrent/hybrid archs prefill at exact prompt
+        # length (one compile per distinct length, as before) until the
+        # scans learn position masking.
+        blk_kinds = set(cfg.block_pattern) | (
+            {cfg.shared_block} if cfg.shared_block is not None else set())
+        self._bucketed = blk_kinds <= set(tf.PAGED_CACHE_FNS)
         self.default_sampling = (sampling if sampling is not None
                                  else SamplingParams(temperature=temperature,
                                                      greedy=greedy))
         self._base_key = jax.random.PRNGKey(seed)
-        self._prefill = jax.jit(make_prefill_step(cfg))
-        sample_fn = jax.jit(make_batched_decode_step(cfg))
-        greedy_fn = jax.jit(make_batched_decode_step(cfg, greedy_only=True))
+
+        if self.kv_impl == "paged":
+            if not self._bucketed:
+                # block-granular prefill writes need block-aligned (i.e.
+                # bucket-padded) widths, and padding is only output-neutral
+                # for attention; recurrent families keep the dense plane
+                raise ValueError(
+                    "paged KV requires an attention-cache-only arch "
+                    f"(block pattern {sorted(blk_kinds)} includes recurrent "
+                    "blocks); serve it with kv_impl='dense'")
+            if max_len % self.block_len:
+                raise ValueError(f"max_len {max_len} not a multiple of "
+                                 f"block_len {self.block_len}")
+            self.max_blocks = max_len // self.block_len
+            if num_blocks is None:
+                # worst-case default: every slot full-length, + scratch
+                num_blocks = slots * self.max_blocks + 1
+            self.pager: Optional[kvp.KVPager] = kvp.KVPager(
+                num_blocks, self.block_len, slots)
+            self._caches = tf.init_paged_cache(
+                cfg, slots, num_blocks, self.block_len, self.max_blocks,
+                jnp.float32)
+            self._prefill = jax.jit(make_paged_prefill_step(cfg),
+                                    donate_argnums=(1,))
+            sample_fn = jax.jit(make_paged_decode_step(cfg))
+            greedy_fn = jax.jit(
+                make_paged_decode_step(cfg, greedy_only=True))
+            self._clear_slot = jax.jit(
+                lambda caches, slot: tf.paged_set_slot(
+                    cfg, caches, slot,
+                    jnp.zeros((self.max_blocks,), jnp.int32),
+                    jnp.zeros((), jnp.int32)),
+                donate_argnums=(0,))
+        else:
+            self.pager = None
+            self._caches = tf.stack_caches(
+                [tf.init_cache(cfg, 1, max_len, jnp.float32)
+                 for _ in range(slots)])
+            self._prefill = jax.jit(make_bucketed_prefill_step(cfg))
+            sample_fn = jax.jit(make_batched_decode_step(cfg))
+            greedy_fn = jax.jit(
+                make_batched_decode_step(cfg, greedy_only=True))
 
         def _dispatch(params, caches, tokens, rids, steps, temps, top_ks,
                       greedy, base_key):
             # all-greedy batches take the argmax-only compile (no sampling
-            # datapath); tokens are identical either way, see
-            # make_batched_decode_step
+            # datapath); tokens are identical either way, see _sample_step
             fn = greedy_fn if bool(np.asarray(greedy).all()) else sample_fn
             return fn(params, caches, tokens, rids, steps, temps, top_ks,
                       greedy, base_key)
 
         self._decode = _dispatch
+        self._decode_jits = (greedy_fn, sample_fn)
         self._sample = jax.jit(sp.sample_batched)
         self._score = jax.jit(make_score_step(cfg))
         self._queue: List[Request] = []
         self._done: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
-        self._caches = tf.stack_caches(
-            [tf.init_cache(cfg, 1, max_len, jnp.float32)
-             for _ in range(slots)])
         self._next_tok = np.zeros((slots, 1), np.int32)
         # per-slot host state mirrored into the batched decode each step
         self._rids = np.zeros(slots, np.int32)
@@ -212,9 +349,35 @@ class ServeEngine:
         """(slots,) bool — which slots currently hold a request."""
         return np.asarray([a is not None for a in self._active])
 
+    def compile_counts(self) -> Dict[str, int]:
+        """Jit-cache sizes of the serving datapath — the bucketed-prefill
+        guarantee made checkable: after serving any mix of prompt lengths,
+        ``prefill <= len(self.buckets)`` and ``decode <= 2`` (argmax-only
+        + sampling variants). The prefill bound holds for attention-family
+        archs; recurrent archs prefill at exact length (see _bucketed)."""
+        return {
+            "prefill": int(self._prefill._cache_size()),
+            "decode": int(sum(fn._cache_size() for fn in self._decode_jits)),
+        }
+
     def _finish(self, req: Request) -> None:
         req.done = True
         self._done.append(req)
+
+    def _release_slot(self, s: int) -> None:
+        """Return slot ``s`` to the free state: paged mode hands its blocks
+        back to the pool and resets the device-side table row to scratch
+        zeros (a vacant slot must never scribble on blocks that get
+        reallocated); sampling knobs reset to greedy defaults so a vacated
+        sampling slot can't pin _dispatch off the cheap all-greedy compile."""
+        self._active[s] = None
+        if self.pager is not None:
+            self.pager.free(s)
+            self._caches = self._clear_slot(self._caches,
+                                            jnp.asarray(s, jnp.int32))
+        self._temps[s] = 1.0
+        self._top_ks[s] = 0
+        self._greedy[s] = True
 
     def _sample_first(self, req: Request, logits) -> int:
         """Sample the prefill-emitted token (step 0 of the request's key
@@ -227,46 +390,122 @@ class ServeEngine:
                            jnp.full((1,), greedy, bool))
         return int(tok[0])
 
-    def _admit(self) -> None:
-        """Fill free slots from the queue: prefill into a fresh cache, write
-        it into the stacked tree, and emit the first token. A request whose
-        first token already hits `eos_token` or whose budget is
-        max_new_tokens=1 finishes here and never occupies a slot."""
+    def _padded_prompt(self, req: Request) -> np.ndarray:
+        """(1, width) int32 prompt, padded to its length bucket for
+        attention-family archs (exact length otherwise — see _bucketed)."""
+        plen = len(req.prompt)
+        width = (kvp.bucket_for(plen, self.buckets) if self._bucketed
+                 else plen)
+        toks = np.zeros((1, width), np.int32)
+        toks[0, :plen] = np.asarray(req.prompt, np.int32)
+        return toks
+
+    def _blocks_for(self, req: Request) -> int:
+        """Pool blocks a request can ever touch: the bucket-padded prefill
+        width or prompt + full decode budget, clamped to max_len."""
+        need_len = min(max(kvp.bucket_for(len(req.prompt), self.buckets),
+                           len(req.prompt) + req.max_new_tokens),
+                       self.max_len)
+        return kvp.blocks_needed(need_len, self.block_len)
+
+    def _register_slot(self, s: int, req: Request, first: int) -> None:
+        """Host-side mirrors for an admitted request."""
+        self._active[s] = req
+        self._next_tok[s, 0] = first
+        temp, top_k, greedy = (req.sampling
+                               or self.default_sampling).resolved()
+        self._rids[s] = req.rid
+        self._steps[s] = len(req.out)
+        self._temps[s] = temp
+        self._top_ks[s] = top_k
+        self._greedy[s] = greedy
+
+    def _finishes_at_prefill(self, req: Request, first: int) -> bool:
+        """A request whose first token already hits `eos_token` or whose
+        budget is max_new_tokens=1 finishes at admission and never
+        occupies a slot."""
+        req.out.append(first)
+        if (self.eos is not None and first == self.eos) or \
+                len(req.out) >= req.max_new_tokens:
+            self._finish(req)
+            return True
+        return False
+
+    def _admit_dense(self) -> None:
         for s in range(self.slots):
             while self._active[s] is None and self._queue:
                 req = self._queue.pop(0)
                 cache = tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
-                toks = jnp.asarray(req.prompt[None, :], jnp.int32)
-                logits, cache = self._prefill(self.params, cache,
-                                              {"tokens": toks})
+                toks = self._padded_prompt(req)
+                logits, cache = self._prefill(
+                    self.params, cache, {"tokens": jnp.asarray(toks)},
+                    jnp.asarray(len(req.prompt), jnp.int32))
                 first = self._sample_first(req, logits)
-                req.out.append(first)
-                if (self.eos is not None and first == self.eos) or \
-                        len(req.out) >= req.max_new_tokens:
-                    self._finish(req)
+                if self._finishes_at_prefill(req, first):
                     continue                      # slot stays free; try next
-                self._active[s] = req
                 self._caches = tf.insert_slot(self._caches, cache, s)
-                self._next_tok[s, 0] = first
-                temp, top_k, greedy = (req.sampling
-                                       or self.default_sampling).resolved()
-                self._rids[s] = req.rid
-                self._steps[s] = len(req.out)
-                self._temps[s] = temp
-                self._top_ks[s] = top_k
-                self._greedy[s] = greedy
+                self._register_slot(s, req, first)
+
+    def _admit_paged(self) -> None:
+        for s in range(self.slots):
+            while self._active[s] is None and self._queue:
+                req = self._queue[0]
+                toks = self._padded_prompt(req)
+                need = self._blocks_for(req)
+                blocks = self.pager.alloc(s, need)
+                if blocks is None:
+                    return      # FIFO backpressure: head waits for frees
+                self._queue.pop(0)
+                row = np.zeros(self.max_blocks, np.int32)
+                row[:need] = blocks
+                logits, self._caches = self._prefill(
+                    self.params, self._caches, jnp.asarray(toks),
+                    jnp.asarray(s, jnp.int32), jnp.asarray(row),
+                    jnp.asarray(len(req.prompt), jnp.int32))
+                first = self._sample_first(req, logits)
+                if self._finishes_at_prefill(req, first):
+                    self._release_slot(s)         # blocks back; try next
+                    continue
+                self._register_slot(s, req, first)
+
+    def _clamp_budget(self, req: Request) -> None:
+        """Truncate max_new_tokens so decode can never write past max_len:
+        positions written are prompt..prompt+max_new-2, so the budget caps
+        at max_len - len(prompt) + 1. Without this the dense path clamps
+        its update into the last position and the paged path's clipped
+        table index overwrites a live block — garbage either way, and
+        differently, which would break the bit-identity contract."""
+        req.max_new_tokens = min(req.max_new_tokens,
+                                 self.max_len - len(req.prompt) + 1)
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (bucket-padded prefill + first
+        token; paged mode also binds freshly allocated pool blocks).
+        Budgets that would decode past max_len are truncated to fit."""
+        for req in self._queue:
+            self._clamp_budget(req)
+        if self.kv_impl == "paged":
+            self._admit_paged()
+        else:
+            self._admit_dense()
 
     def step(self) -> int:
         """One batched decode step across all slots; returns #active.
 
         Exactly ONE jitted decode call regardless of slot count: inactive
-        slots ride along (their output is ignored and their cache is
-        re-prefilled at admission), so the dispatch count and the compiled
-        shape never depend on occupancy.
+        slots ride along (their output is ignored; dense slots are
+        re-prefilled at admission, paged slots write into the scratch
+        block), so the dispatch count and the compiled shape never depend
+        on occupancy.
         """
         self._admit()
         active = [s for s in range(self.slots) if self._active[s] is not None]
         if not active:
+            if self._queue and self.pager is not None:
+                raise RuntimeError(
+                    f"request {self._queue[0].rid} can never be admitted: "
+                    f"needs {self._blocks_for(self._queue[0])} KV blocks, "
+                    f"pool has {self.pager.num_blocks - 1} allocatable")
             return 0
         nxt, self._caches = self._decode(
             self.params, self._caches, jnp.asarray(self._next_tok),
@@ -283,12 +522,7 @@ class ServeEngine:
             if (self.eos is not None and tok == self.eos) or \
                     len(req.out) >= req.max_new_tokens:
                 self._finish(req)
-                self._active[s] = None
-                # reset to greedy defaults so a vacated sampling slot can't
-                # pin _dispatch off the cheap all-greedy compile
-                self._temps[s] = 1.0
-                self._top_ks[s] = 0
-                self._greedy[s] = True
+                self._release_slot(s)
         return len(active)
 
     def run(self) -> List[Request]:

@@ -1,0 +1,156 @@
+"""Paged KV cache management: a host-side block allocator + the prefill
+bucket policy.
+
+The serving memory plane is a single global pool of fixed-size KV blocks
+per attention layer — device leaves shaped ``(num_blocks, block_len, ...)``
+(see models.attention.gqa_init_paged_cache) — and a per-slot *block table*
+mapping each slot's logical positions onto pool blocks. This module owns
+the host side of that scheme:
+
+``KVPager``
+    The free-list allocator. Block 0 is reserved as the *scratch block*:
+    every empty table entry (and every table row of a vacant slot) points
+    at it, so inactive slots riding along in the batched decode scatter
+    their garbage writes into scratch instead of corrupting blocks that
+    have been reallocated to live requests. Allocation is all-or-nothing
+    per request — a request that does not fit stays in the queue
+    (admission backpressure), it never partially holds blocks.
+
+``bucket_lengths`` / ``bucket_for``
+    The prefill bucket policy: prompts are padded up to a small geometric
+    set of lengths (16, 32, 64, ... max_len), so the number of prefill
+    compiles is bounded by the bucket count instead of growing with every
+    distinct prompt length. Buckets are multiples of ``block_len`` so a
+    padded prefill writes whole blocks. Padding is harmless for output:
+    with causal attention the logits at the last *real* position never see
+    the pad tail, and pad K/V land past the slot length mask (and are
+    overwritten by decode writes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+#: Pool block id reserved for garbage writes from vacant slots; never
+#: allocated to a request and never read through a live mask.
+SCRATCH_BLOCK = 0
+
+
+def bucket_lengths(max_len: int, block_len: int = 16,
+                   min_bucket: int = 16) -> Tuple[int, ...]:
+    """Geometric prefill-length buckets up to ``max_len``.
+
+    Every bucket is a multiple of ``block_len`` (whole-block prefill
+    writes) and the last bucket is exactly ``max_len``. Doubling keeps the
+    set small: len(buckets) == O(log(max_len / min_bucket)).
+    """
+    if max_len <= 0:
+        raise ValueError(f"max_len must be positive, got {max_len}")
+    base = -(-max(min_bucket, block_len) // block_len) * block_len
+    out: List[int] = []
+    b = base
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(sorted({min(b, max_len) for b in out}))
+
+
+def bucket_for(length: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= ``length`` (the padded prefill width)."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+def blocks_needed(length: int, block_len: int) -> int:
+    """Pool blocks required to hold ``length`` positions."""
+    return -(-length // block_len)
+
+
+@dataclasses.dataclass
+class PagerStats:
+    num_blocks: int            # pool size, including the scratch block
+    blocks_in_use: int         # currently allocated to live requests
+    blocks_free: int
+    peak_in_use: int           # high-water mark since construction
+    allocs: int                # successful allocations
+    alloc_failures: int        # backpressure events (request stayed queued)
+
+
+class KVPager:
+    """Host-side free-list allocator over the global KV block pool.
+
+    ``num_blocks`` counts the whole pool *including* the reserved scratch
+    block, matching the device pool's leading axis. Capacity available to
+    requests is therefore ``num_blocks - 1``.
+    """
+
+    def __init__(self, num_blocks: int, block_len: int, slots: int):
+        if num_blocks < 2:
+            raise ValueError("pool needs >= 2 blocks (one is scratch)")
+        if block_len < 1:
+            raise ValueError(f"block_len must be >= 1, got {block_len}")
+        self.num_blocks = num_blocks
+        self.block_len = block_len
+        self.slots = slots
+        # LIFO free list: recently freed blocks are reused first, which
+        # keeps the working set compact and exercises stale-block masking
+        self._free: List[int] = list(range(num_blocks - 1, SCRATCH_BLOCK, -1))
+        self._owned: Dict[int, List[int]] = {}
+        self._peak = 0
+        self._allocs = 0
+        self._failures = 0
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def blocks_in_use(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    @property
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def owned(self, slot: int) -> Tuple[int, ...]:
+        return tuple(self._owned.get(slot, ()))
+
+    def stats(self) -> PagerStats:
+        return PagerStats(num_blocks=self.num_blocks,
+                          blocks_in_use=self.blocks_in_use,
+                          blocks_free=self.blocks_free,
+                          peak_in_use=self._peak,
+                          allocs=self._allocs,
+                          alloc_failures=self._failures)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, slot: int, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks for ``slot``; all-or-nothing.
+
+        Returns the block ids (order == logical block-table order) or None
+        when the pool cannot satisfy the request — the caller leaves the
+        request queued (backpressure), nothing is held.
+        """
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already holds blocks "
+                               f"{self._owned[slot]} (free it first)")
+        if n < 1:
+            raise ValueError(f"allocation must be >= 1 block, got {n}")
+        if n > len(self._free):
+            self._failures += 1
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self._owned[slot] = blocks
+        self._allocs += 1
+        self._peak = max(self._peak, self.blocks_in_use)
+        return list(blocks)
+
+    def free(self, slot: int) -> int:
+        """Release every block held by ``slot``; returns how many."""
+        blocks = self._owned.pop(slot, [])
+        self._free.extend(reversed(blocks))
+        return len(blocks)

@@ -1,0 +1,115 @@
+"""Host-side paged-KV unit tests: the bucket policy and the block
+allocator (serve/kv_pager.py). Device-side behavior (pool writes, table
+gathers, bit-identity with the dense path) lives in tests/test_serving.py."""
+import numpy as np
+import pytest
+
+from repro.serve import kv_pager as kvp
+
+
+# ---------------------------------------------------------------------------
+# Bucket policy
+# ---------------------------------------------------------------------------
+def test_bucket_lengths_geometric_and_block_aligned():
+    b = kvp.bucket_lengths(256, block_len=16)
+    assert b == (16, 32, 64, 128, 256)
+    assert all(x % 16 == 0 for x in b)
+    assert b[-1] == 256
+    assert b == tuple(sorted(b))
+
+
+def test_bucket_lengths_non_power_of_two_max():
+    b = kvp.bucket_lengths(96, block_len=16)
+    assert b == (16, 32, 64, 96)
+    assert all(x % 16 == 0 for x in b)
+
+
+def test_bucket_lengths_small_max():
+    assert kvp.bucket_lengths(8, block_len=4) == (8,)
+    assert kvp.bucket_lengths(16, block_len=16) == (16,)
+
+
+def test_bucket_lengths_block_len_above_min_bucket():
+    b = kvp.bucket_lengths(256, block_len=64)
+    assert b == (64, 128, 256)
+    assert all(x % 64 == 0 for x in b)
+
+
+def test_bucket_count_is_logarithmic():
+    b = kvp.bucket_lengths(4096, block_len=16)
+    assert len(b) <= 10          # 16..4096 doubling: 9 buckets
+    assert b[-1] == 4096
+
+
+def test_bucket_for_rounds_up():
+    b = (16, 32, 64)
+    assert kvp.bucket_for(1, b) == 16
+    assert kvp.bucket_for(16, b) == 16
+    assert kvp.bucket_for(17, b) == 32
+    assert kvp.bucket_for(64, b) == 64
+    with pytest.raises(ValueError, match="exceeds"):
+        kvp.bucket_for(65, b)
+
+
+def test_blocks_needed():
+    assert kvp.blocks_needed(1, 16) == 1
+    assert kvp.blocks_needed(16, 16) == 1
+    assert kvp.blocks_needed(17, 16) == 2
+    assert kvp.blocks_needed(64, 16) == 4
+
+
+# ---------------------------------------------------------------------------
+# KVPager allocator
+# ---------------------------------------------------------------------------
+def test_scratch_block_reserved():
+    p = kvp.KVPager(num_blocks=5, block_len=16, slots=2)
+    got = p.alloc(0, 4)
+    assert got is not None
+    assert kvp.SCRATCH_BLOCK not in got          # block 0 never handed out
+    assert sorted(got) == [1, 2, 3, 4]
+    assert p.blocks_free == 0
+
+
+def test_alloc_free_roundtrip_and_stats():
+    p = kvp.KVPager(num_blocks=9, block_len=16, slots=4)
+    a = p.alloc(0, 3)
+    b = p.alloc(1, 2)
+    assert len(a) == 3 and len(b) == 2
+    assert set(a).isdisjoint(b)
+    assert p.blocks_in_use == 5
+    assert p.owned(0) == tuple(a)
+    assert p.free(0) == 3
+    assert p.blocks_in_use == 2
+    assert p.owned(0) == ()
+    st = p.stats()
+    assert st.peak_in_use == 5 and st.allocs == 2 and st.alloc_failures == 0
+    assert st.blocks_free + st.blocks_in_use == st.num_blocks - 1
+
+
+def test_alloc_is_all_or_nothing():
+    p = kvp.KVPager(num_blocks=4, block_len=16, slots=2)
+    assert p.alloc(0, 2) is not None
+    assert p.alloc(1, 2) is None                 # only 1 left: holds nothing
+    assert p.blocks_in_use == 2
+    assert p.stats().alloc_failures == 1
+    assert p.alloc(1, 1) is not None             # the 1 left still works
+
+
+def test_double_alloc_same_slot_raises():
+    p = kvp.KVPager(num_blocks=4, block_len=16, slots=2)
+    p.alloc(0, 1)
+    with pytest.raises(RuntimeError, match="already holds"):
+        p.alloc(0, 1)
+
+
+def test_free_vacant_slot_is_noop():
+    p = kvp.KVPager(num_blocks=4, block_len=16, slots=2)
+    assert p.free(1) == 0
+
+
+def test_freed_blocks_are_reusable():
+    p = kvp.KVPager(num_blocks=3, block_len=16, slots=1)
+    first = p.alloc(0, 2)
+    p.free(0)
+    second = p.alloc(0, 2)
+    assert sorted(first) == sorted(second)       # full reuse of the pool
