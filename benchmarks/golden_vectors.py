@@ -1,7 +1,7 @@
-"""Generate the golden-vector conformance set for the Q2.14 integer datapath.
+"""Generate the golden-vector conformance set for the integer datapaths.
 
-Writes one ``.npz`` per function into ``tests/golden/``, each holding the
-*exhaustive* input-code -> output-code map of the bit-accurate pipeline:
+Writes one ``.npz`` per function into ``tests/golden/``, each holding an
+input-code -> output-code map of the bit-accurate pipeline:
 
     sigmoid  all 2^16 Q2.14 codes -> sigmoid_mr_q codes (paper pipeline)
     tanh     all 2^16 Q2.14 codes -> tanh_mr_q codes
@@ -10,13 +10,21 @@ Writes one ``.npz`` per function into ``tests/golden/``, each holding the
     log      mantissa codes m in [0.5, 1) -> hyperbolic-vectoring
              2*atanh((m-1)/(m+1)) accumulator codes (the log leg)
 
-The files are checked in; tests/test_golden_vectors.py asserts that both
-the jnp engine path and the Pallas kernel path reproduce them bit-exactly,
-so a refactor of the iteration core cannot silently drift from the paper's
-published 4.23e-4 MAE behavior. Regenerate (only after an *intentional*
-datapath change) with:
+``--profile q2_20|q2_29|all`` additionally freezes the *wider-format*
+profiles (functions.FORMAT_PROFILES: format-sized schedules at 20/29
+fraction bits). Their code spaces (2^22 / 2^31) are too large to sweep
+exhaustively, so the profile vectors store explicit ``x`` codes alongside
+``y``: a full-range stride sweep (every Q2.14-aligned code, i.e. the 2^16
+paper-format lattice embedded in the wider format) plus a dense window
+around 0 exercising the low-order bits the stride lattice misses.
 
-    PYTHONPATH=src python benchmarks/golden_vectors.py
+The files are checked in; tests/test_golden_vectors.py asserts that the
+jnp engine path (and the Pallas kernel path, where a kernel entry exists)
+reproduces them bit-exactly, so a refactor of the iteration core cannot
+silently drift from the paper's published 4.23e-4 MAE behavior — at any
+format. Regenerate (only after an *intentional* datapath change) with:
+
+    PYTHONPATH=src python benchmarks/golden_vectors.py [--profile all]
 """
 from __future__ import annotations
 
@@ -30,11 +38,15 @@ import jax.numpy as jnp
 from repro.core import cordic as C
 from repro.core import fixed_point as fp
 from repro.cordic_engine import core as eng
+from repro.cordic_engine.functions import FORMAT_PROFILES
 from repro.cordic_engine.schedule import HYP_ROTATION, HYP_VECTORING
 
 #: mantissa code range for the log leg: m = code * 2^-14 in [0.5, 1).
 LOG_M_LO, LOG_M_HI = 1 << 13, 1 << 14
 ONE_Q = 1 << 14
+
+#: dense-window half-width for the profile vectors (low-bit coverage).
+DENSE_HALF = 1 << 12
 
 
 def generate() -> dict:
@@ -66,7 +78,60 @@ def generate() -> dict:
     }
 
 
-def write(out_dir: str) -> None:
+def _profile_domain(fb: int) -> np.ndarray:
+    """Input codes for a wider-format sweep: the Q2.14 lattice embedded at
+    frac_bits ``fb`` (full range, 2^16 points) plus a dense window around 0
+    (low-order-bit coverage). Sorted, unique, int64."""
+    stride = np.arange(-(1 << 15), 1 << 15, dtype=np.int64) << (fb - 14)
+    dense = np.arange(-DENSE_HALF, DENSE_HALF + 1, dtype=np.int64)
+    return np.unique(np.concatenate([stride, dense]))
+
+
+def generate_profile(name: str) -> dict:
+    """Golden (x, y) maps for one FORMAT_PROFILES entry.
+
+    Same four functions as the Q2.14 set, computed with the profile's
+    format-sized schedules; inputs are stored explicitly (the sweep is a
+    deterministic sample, not exhaustive)."""
+    p = FORMAT_PROFILES[name]
+    fb = p.cfg.fmt.frac_bits
+    one = 1 << fb
+    codes = _profile_domain(fb)
+    xj = jnp.asarray(codes, jnp.int32)
+
+    sig = np.asarray(C.sigmoid_mr_q(xj, p.pipeline, p.cfg), np.int32)
+    tah = np.asarray(C.tanh_mr_q(xj, p.pipeline, p.cfg), np.int32)
+    c, s, _ = eng.rotate_q(xj, p.rotation, p.cfg)
+    ex = np.asarray(fp.add(c, s, p.cfg.fmt), np.int32)
+
+    # log leg: mantissa codes in [0.5, 1) on the Q2.14 lattice + dense tail
+    m_stride = (np.arange(1 << 13, 1 << 14, dtype=np.int64) << (fb - 14))
+    m_dense = (1 << (fb - 1)) + np.arange(DENSE_HALF, dtype=np.int64)
+    mq = np.unique(np.concatenate([m_stride, m_dense]))
+    mj = jnp.asarray(mq, jnp.int32)
+    lg = np.asarray(eng.vector_q(mj + one, mj - one, p.vectoring, p.cfg),
+                    np.int32)
+
+    fmt = str(p.cfg.fmt)
+    dom = f"Q2.14 lattice << {fb - 14} + dense |x| <= {DENSE_HALF}"
+    return {
+        f"sigmoid_{name}": (codes, sig, dict(
+            fmt=fmt, profile=name, domain=dom,
+            pipeline="sigmoid_mr_q(profile.pipeline)")),
+        f"tanh_{name}": (codes, tah, dict(
+            fmt=fmt, profile=name, domain=dom,
+            pipeline="tanh_mr_q(profile.pipeline)")),
+        f"exp_{name}": (codes, ex, dict(
+            fmt=fmt, profile=name, domain=dom,
+            pipeline="cosh+sinh of rotate_q(profile.rotation)")),
+        f"log_{name}": (mq, lg, dict(
+            fmt=fmt, profile=name,
+            domain=f"mantissa codes [{1 << (fb - 1)}, {1 << fb}) sampled",
+            pipeline="vector_q(m+1, m-1, profile.vectoring)")),
+    }
+
+
+def write(out_dir: str, profiles=()) -> None:
     out = pathlib.Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     for name, (codes, meta) in generate().items():
@@ -75,11 +140,26 @@ def write(out_dir: str) -> None:
                             meta=np.bytes_(json.dumps(meta, sort_keys=True)))
         print(f"wrote {path} ({codes.size} codes, "
               f"{path.stat().st_size / 1024:.0f} KiB)")
+    for prof in profiles:
+        for name, (x, y, meta) in generate_profile(prof).items():
+            path = out / f"{name}.npz"
+            np.savez_compressed(
+                path, x=x.astype(np.int32), y=y,
+                meta=np.bytes_(json.dumps(meta, sort_keys=True)))
+            print(f"wrote {path} ({y.size} codes, "
+                  f"{path.stat().st_size / 1024:.0f} KiB)")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default=str(pathlib.Path(__file__).parent.parent
                                          / "tests" / "golden"))
+    ap.add_argument("--profile", default=None,
+                    choices=[*sorted(set(FORMAT_PROFILES) - {"q2_14"}), "all"],
+                    help="also freeze the wider-format profile vectors "
+                         "(q2_20 / q2_29; 'all' for both)")
     args = ap.parse_args()
-    write(args.out)
+    profs = (sorted(set(FORMAT_PROFILES) - {"q2_14"})
+             if args.profile == "all" else
+             [args.profile] if args.profile else [])
+    write(args.out, profs)

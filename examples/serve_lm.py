@@ -10,7 +10,12 @@ not by distinct prompt lengths), then one jitted decode call per engine
 step for all slots at once — slots refilled from the queue as requests
 finish. ``--kv-impl paged`` swaps the per-slot dense caches for a global
 block pool with per-slot block tables (serve/kv_pager.py); emitted tokens
-are bit-identical either way. Sampling runs on the CORDIC datapath
+are bit-identical either way. ``--paged-attend-impl pallas`` additionally
+swaps the paged decode's full-table gather for the block-walking Pallas
+kernel (kernels/paged_attention.py): each slot walks only its *live* KV
+blocks — one block in VMEM per grid step, online softmax in f32 scratch —
+so the per-step transient working set no longer scales with max_len, and
+the emitted tokens are unchanged. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
@@ -46,6 +51,13 @@ def main():
                          "paged global block pool (bit-identical tokens)")
     ap.add_argument("--block-len", type=int, default=16,
                     help="positions per KV block / prefill bucket granularity")
+    ap.add_argument("--paged-attend-impl", default="gather",
+                    choices=["gather", "pallas"],
+                    help="paged decode attend: 'gather' assembles the full "
+                         "block-table gather (dense-shaped transient), "
+                         "'pallas' walks live blocks in place with the "
+                         "paged-attention kernel (O(block-len) transient, "
+                         "same tokens). Requires --kv-impl paged")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -63,7 +75,8 @@ def main():
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
                       sampling=sampling, seed=args.seed,
-                      kv_impl=args.kv_impl, block_len=args.block_len)
+                      kv_impl=args.kv_impl, block_len=args.block_len,
+                      paged_attend_impl=args.paged_attend_impl)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

@@ -89,6 +89,13 @@ class ModelConfig:
                                          # output is bit-identical either way
     kv_block_len: int = 16               # positions per KV block (paged) and
                                          # the prefill-bucket granularity
+    paged_attend_impl: str = "gather"    # gather | pallas: how a paged decode
+                                         # attends — full-table gather (dense-
+                                         # shaped transient, provably bit-
+                                         # identical) vs the block-walking
+                                         # Pallas kernel (O(block_len) VMEM
+                                         # transient per step, token-identical;
+                                         # kernels/paged_attention.py)
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None
     ssm: Optional[SSMConfig] = None

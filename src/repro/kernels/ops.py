@@ -173,6 +173,35 @@ def _log_softmax_jvp(axis, sched, cfg, primals, tangents):
     return y, dx - jnp.sum(p * dx, axis=axis, keepdims=True)
 
 
+def paged_attend_gqa(q, k_pool, v_pool, tables, k_len, *, scale,
+                     softmax_impl: str = "exact", kv_dtype=None,
+                     sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:
+    """Block-walking paged GQA decode attend (kernels/paged_attention.py).
+
+    Walks each row's live KV blocks through its block table — one block
+    in VMEM per grid step, online softmax in f32 scratch — instead of
+    gathering the full (max_len)-sized buffer.  Selected by
+    ``cfg.paged_attend_impl="pallas"`` in models.attention.
+    """
+    from repro.kernels import paged_attention as PA
+
+    return PA.gqa_decode(q, k_pool, v_pool, tables, k_len, scale=scale,
+                         softmax_impl=softmax_impl, kv_dtype=kv_dtype,
+                         sched=sched, cfg=cfg, interpret=_use_interpret())
+
+
+def paged_attend_mla(q_eff, q_rope, c_pool, r_pool, tables, k_len, *, scale,
+                     softmax_impl: str = "exact",
+                     sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:
+    """Block-walking paged MLA decode attend (absorbed form); see
+    paged_attend_gqa.  Returns latent outputs (B,H,R) f32."""
+    from repro.kernels import paged_attention as PA
+
+    return PA.mla_decode(q_eff, q_rope, c_pool, r_pool, tables, k_len,
+                         scale=scale, softmax_impl=softmax_impl,
+                         sched=sched, cfg=cfg, interpret=_use_interpret())
+
+
 def sigmoid_q(x_q: jax.Array, sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:
     """Integer path: Q2.14 codes in (int16/int32), Q2.14 codes out.
 

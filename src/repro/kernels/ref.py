@@ -43,3 +43,56 @@ def sigmoid_q_ref(x_q: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
     from repro.core.cordic import sigmoid_mr_q
 
     return sigmoid_mr_q(x_q, sched, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention decode references: the full-table *gather* computation as
+# an oracle, built FROM the production functions in models.attention
+# (_pool_gather + _attend_rows / _mla_absorbed_decode) rather than a
+# re-implementation — so the oracle cannot silently drift from the path it
+# represents.  The Pallas block-walking kernels must agree with these to
+# f32 round-off on attention outputs and bit-exactly on the resulting
+# argmax/token decisions.
+# ---------------------------------------------------------------------------
+def paged_attend_gqa_ref(q, k_pool, v_pool, tables, k_len, *, scale,
+                         softmax_impl: str = "exact", kv_dtype=None):
+    """Gather-path oracle for kernels.paged_attention.gqa_decode.
+
+    q (B,KH,G,hd); pools (N,L,KH,hd); tables (B,M); k_len (B,).
+    Returns (B,KH,G,hd) f32 — _pool_gather + _attend_rows exactly as
+    models.attention._gqa_paged_apply's gather decode runs them (the
+    decode query sits at position k_len - 1, making the causal mask
+    equivalent to the plain length mask).
+    """
+    from repro.models import attention as A  # lazy: avoid import cycle
+
+    kv_dtype = kv_dtype if kv_dtype is not None else k_pool.dtype
+    kf = A._pool_gather(k_pool, tables).astype(kv_dtype)
+    vf = A._pool_gather(v_pool, tables).astype(kv_dtype)
+    o = A._attend_rows(q[:, None], kf, vf, (k_len - 1)[:, None], k_len,
+                       scale, "f32", softmax_impl)
+    return o[:, 0]
+
+
+def paged_attend_mla_ref(q_eff, q_rope, c_pool, r_pool, tables, k_len, *,
+                         scale, softmax_impl: str = "exact"):
+    """Gather-path oracle for kernels.paged_attention.mla_decode.
+
+    q_eff (B,H,R), q_rope (B,H,P); pools (N,L,R)/(N,L,P); returns the
+    latent output (B,H,R) f32.  Runs the production
+    _mla_absorbed_decode with identity wk_b/wv_b so the already-absorbed
+    query passes through unchanged and the latent output comes back
+    unprojected — the score/mask/normalize math is the real path's.
+    """
+    from repro.models import attention as A  # lazy: avoid import cycle
+
+    B, H, R = q_eff.shape
+    cc = A._pool_gather(c_pool, tables)
+    cr = A._pool_gather(r_pool, tables)
+    T = cc.shape[1]
+    eye = jnp.broadcast_to(jnp.eye(R, dtype=q_eff.dtype)[:, None, :],
+                           (R, H, R))
+    valid = (jnp.arange(T)[None, :] < k_len[:, None])[:, None, None, :]
+    o = A._mla_absorbed_decode(q_eff[:, None], q_rope[:, None], cc, cr,
+                               eye, eye, scale, valid, "f32", softmax_impl)
+    return o[:, 0]

@@ -41,6 +41,12 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size incl. scratch (0 = worst-case "
                          "slots*max_len/block_len + 1)")
+    ap.add_argument("--paged-attend-impl", default="gather",
+                    choices=["gather", "pallas"],
+                    help="paged decode attend: full-table gather (dense-"
+                         "shaped transient) or the block-walking Pallas "
+                         "kernel (O(block_len) transient; same tokens). "
+                         "Requires --kv-impl paged")
     args = ap.parse_args(argv)
 
     cfg = (configs.get_smoke(args.arch, act_impl=args.act_impl) if args.smoke
@@ -56,7 +62,8 @@ def main(argv=None):
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=args.max_len,
                       sampling=sampling, kv_impl=args.kv_impl,
                       block_len=args.block_len,
-                      num_blocks=args.num_blocks or None)
+                      num_blocks=args.num_blocks or None,
+                      paged_attend_impl=args.paged_attend_impl)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

@@ -115,6 +115,32 @@ def causal_attention(q, k, v, *, q_offset=0, k_len=None, chunk: int = 1024,
 # this is the device side — block-granular writes, table gathers, and a
 # per-row-positioned attend that is bit-identical to the dense path.
 # ---------------------------------------------------------------------------
+def _paged_attend_impl(cfg) -> str:
+    """cfg.paged_attend_impl with validation: how a paged decode attends.
+
+    "gather" — assemble the full table gather and attend over dense shapes
+               (_pool_gather + _attend_rows / _mla_absorbed_decode): the
+               provably bit-identical reference.
+    "pallas" — walk the block table in place with the block-walking decode
+               kernel (kernels/paged_attention.py): O(block_len) transient
+               instead of O(max_len); emitted tokens identical (enforced
+               per backend in tests/test_paged_attention.py).  Applies to
+               the single-query decode step only — paged *prefill* always
+               takes the gather path.
+    """
+    impl = getattr(cfg, "paged_attend_impl", "gather")
+    if impl not in ("gather", "pallas"):
+        raise ValueError(f"unknown paged_attend_impl {impl!r}")
+    if impl == "pallas" and cfg.score_dtype != "f32":
+        # the kernels score in f32; a bf16_mxu gather attend would round
+        # differently and the token-identity contract would silently break
+        raise ValueError(
+            "paged_attend_impl='pallas' supports score_dtype='f32' only "
+            f"(got {cfg.score_dtype!r}); use the gather path for "
+            "bf16_mxu scoring")
+    return impl
+
+
 def _pool_write(pool, tables, lens, new):
     """Write ``S`` new positions per batch row into the block pool.
 
@@ -150,8 +176,9 @@ def _pool_gather(pool, tables):
     transient working set for exactness: the attend then runs over the
     same shapes as the dense path, which is what keeps paged decode
     bit-identical to dense. Paging therefore shrinks *resident* KV (the
-    pool) but not the per-step gather; a block-wise paged-attention
-    kernel that never materializes the gather is the ROADMAP follow-up."""
+    pool) but not the per-step gather; ``cfg.paged_attend_impl="pallas"``
+    swaps the decode step for the block-walking kernel in
+    kernels/paged_attention.py, whose transient is O(block_len) instead."""
     B, M = tables.shape
     L = pool.shape[1]
     return pool[tables].reshape((B, M * L) + pool.shape[2:])
@@ -257,9 +284,12 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
 
     Decode (S==1): every row writes its new K/V element through its block
     table, then attends against the table-gathered (B, M*L, KH, hd) buffer
-    masked past the per-slot length. Prefill (S==bucket width, one row):
-    whole-block writes, then the same gather-and-attend — shape-identical
-    to the dense path's full-cache attend, which keeps logits bit-equal.
+    masked past the per-slot length — or, with
+    ``cfg.paged_attend_impl="pallas"``, walks its live blocks in place via
+    the block-walking kernel (no gather is materialized). Prefill
+    (S==bucket width, one row): whole-block writes, then the
+    gather-and-attend — shape-identical to the dense path's full-cache
+    attend, which keeps logits bit-equal.
     """
     B, S, _ = x.shape
     hd = cfg.head_dim
@@ -273,13 +303,22 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
 
     kp = _pool_write(cache["k_pool"], tables, lens, k)
     vp = _pool_write(cache["v_pool"], tables, lens, v)
-    k_full = _pool_gather(kp, tables).astype(x.dtype)
-    v_full = _pool_gather(vp, tables).astype(x.dtype)
-
     qg = q.reshape(B, S, KH, G, hd)
-    o = _attend_rows(qg, k_full, v_full, positions, lens + S,
-                     1.0 / np.sqrt(hd), cfg.score_dtype,
-                     getattr(cfg, "softmax_impl", "exact"))
+
+    if S == 1 and _paged_attend_impl(cfg) == "pallas":
+        # Block-walking decode kernel: never materializes the table gather.
+        from repro.kernels import ops as kops  # lazy: kernels optional
+
+        o = kops.paged_attend_gqa(
+            qg[:, 0], kp, vp, tables, lens + 1, scale=1.0 / np.sqrt(hd),
+            softmax_impl=getattr(cfg, "softmax_impl", "exact"),
+            kv_dtype=x.dtype)[:, None]                  # (B,1,KH,G,hd) f32
+    else:
+        k_full = _pool_gather(kp, tables).astype(x.dtype)
+        v_full = _pool_gather(vp, tables).astype(x.dtype)
+        o = _attend_rows(qg, k_full, v_full, positions, lens + S,
+                         1.0 / np.sqrt(hd), cfg.score_dtype,
+                         getattr(cfg, "softmax_impl", "exact"))
     o = o.astype(qg.dtype).reshape(B, S, KH * G, hd)
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
     new_cache = {"k_pool": kp, "v_pool": vp, "tables": tables,
@@ -467,9 +506,6 @@ def _mla_paged_apply(params, x, cfg, cache):
 
     cp = _pool_write(cache["c_kv_pool"], tables, lens, c_kv)
     rp = _pool_write(cache["k_rope_pool"], tables, lens, k_rope)
-    cc = _pool_gather(cp, tables)                               # (B,T,R)
-    cr = _pool_gather(rp, tables)                               # (B,T,rope)
-    T = cc.shape[1]
 
     wkv_b = params["wkv_b"].astype(x.dtype)
     wk_b, wv_b = wkv_b[..., : m.qk_nope_dim], wkv_b[..., m.qk_nope_dim:]
@@ -477,13 +513,32 @@ def _mla_paged_apply(params, x, cfg, cache):
     k_len = lens + S
 
     if S == 1:
-        # Absorbed decode against the gathered buffer; per-row valid mask.
-        valid = (jnp.arange(T)[None, :] < k_len[:, None])[:, None, None, :]
-        o = _mla_absorbed_decode(q_nope, q_rope, cc, cr, wk_b, wv_b, scale,
-                                 valid, cfg.score_dtype,
-                                 getattr(cfg, "softmax_impl", "exact"))
+        if _paged_attend_impl(cfg) == "pallas":
+            # Block-walking absorbed decode: the kernel accumulates the
+            # latent output; wv_b projection mirrors _mla_absorbed_decode.
+            from repro.kernels import ops as kops  # lazy: kernels optional
+
+            q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)
+            o_lat = kops.paged_attend_mla(
+                q_eff[:, 0], q_rope[:, 0], cp, rp, tables, lens + 1,
+                scale=scale,
+                softmax_impl=getattr(cfg, "softmax_impl", "exact"))
+            o = jnp.einsum("bshl,lhv->bshv", o_lat[:, None],
+                           wv_b.astype(jnp.float32))
+        else:
+            # Absorbed decode against the gathered buffer; per-row mask.
+            cc = _pool_gather(cp, tables)                       # (B,T,R)
+            cr = _pool_gather(rp, tables)                       # (B,T,rope)
+            T = cc.shape[1]
+            valid = (jnp.arange(T)[None, :] < k_len[:, None])[:, None, None, :]
+            o = _mla_absorbed_decode(q_nope, q_rope, cc, cr, wk_b, wv_b,
+                                     scale, valid, cfg.score_dtype,
+                                     getattr(cfg, "softmax_impl", "exact"))
     else:
-        # Prefill: decompress the gathered buffer, per-row-positioned attend.
+        # Prefill: decompress the gathered buffer, per-row-positioned attend
+        # (always the gather path — paged_attend_impl selects decode only).
+        cc = _pool_gather(cp, tables)                           # (B,T,R)
+        cr = _pool_gather(rp, tables)                           # (B,T,rope)
         k, v, qg = _mla_decompress_kq(q_nope, q_rope, cc, cr, m, H,
                                       wk_b, wv_b)
         o = _attend_rows(qg, k, v, positions, k_len, scale,

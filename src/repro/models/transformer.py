@@ -261,7 +261,10 @@ def init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
     tables/lengths, and recurrent segments hold their usual (slots, ...)
     batch state. Decode is a single batch-``slots`` apply — no vmap, the
     pool is shared — and admission writes one slot through
-    paged_slot_view / paged_slot_merge.
+    paged_slot_view / paged_slot_merge. How the decode step attends is
+    selected by ``cfg.paged_attend_impl``: the full-table gather or the
+    block-walking Pallas kernel (see models/attention.py and
+    kernels/paged_attention.py).
     """
     assert cfg.shared_block is None, \
         "paged KV does not support shared-block (zamba2-style) configs yet"

@@ -21,7 +21,12 @@ layout behind it is selected by ``cfg.kv_impl``:
     a request that does not fit stays queued (backpressure) instead of
     crashing. Decode gathers each slot's blocks through its table and masks
     past the per-slot length — bit-identical tokens to the dense path
-    (greedy and seeded sampling), CI-enforced.
+    (greedy and seeded sampling), CI-enforced. ``cfg.paged_attend_impl``
+    picks how that decode attends: ``gather`` (assemble the full table
+    gather; dense-shaped transient) or ``pallas`` (the block-walking
+    kernel in kernels/paged_attention.py: one KV block in VMEM per grid
+    step, online softmax, transient independent of max_len — same emitted
+    tokens, enforced per backend in tests/test_paged_attention.py).
 
 Admission prefills are *bucketed*: prompts are padded to a small geometric
 set of lengths (serve.kv_pager.bucket_lengths, 16/32/.../max_len) with the
@@ -80,15 +85,24 @@ def make_paged_prefill_step(cfg):
     table, runs the bucket-padded prefill through a batch-1 slot view
     (fresh recurrent state, shared pools), writes the updated pools + slot
     rows back, and pins the slot length to the real prompt length. No
-    dense max_len cache is materialized and nothing is copied at insert."""
-    def prefill(params, caches, tokens, slot, table_row, true_len):
-        caches = tf.paged_set_slot(cfg, caches, slot, table_row,
+    dense max_len cache is materialized and nothing is copied at insert.
+
+    Tail-write trim: the prefill runs against ``write_row``, whose entries
+    past the last block holding a *real* prompt position are redirected to
+    the scratch block — bucket-pad positions past that block scatter into
+    scratch instead of burning pool write traffic on blocks whose content
+    would never be read (pad keys are causally invisible to the last real
+    position, and decode overwrites pad positions before the length mask
+    ever exposes them).  ``full_row`` — the real allocation — is bound
+    afterwards so decode writes land in live blocks."""
+    def prefill(params, caches, tokens, slot, write_row, full_row, true_len):
+        caches = tf.paged_set_slot(cfg, caches, slot, write_row,
                                    jnp.zeros((), jnp.int32))
         view = tf.paged_slot_view(cfg, caches, slot)
         logits, _, nview = tf.apply(params, {"tokens": tokens}, cfg,
                                     cache=view)
-        nview = tf.override_cache_length(nview, true_len)
         caches = tf.paged_slot_merge(cfg, caches, nview, slot)
+        caches = tf.paged_set_slot(cfg, caches, slot, full_row, true_len)
         last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
                                             keepdims=False)
         return last, caches
@@ -236,7 +250,8 @@ class ServeEngine:
                  loss_impl: Optional[str] = None,
                  kv_impl: Optional[str] = None,
                  block_len: Optional[int] = None,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 paged_attend_impl: Optional[str] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
         if softmax_impl is not None:
             cfg = dataclasses.replace(cfg, softmax_impl=softmax_impl)
@@ -246,6 +261,8 @@ class ServeEngine:
             cfg = dataclasses.replace(cfg, kv_impl=kv_impl)
         if block_len is not None:
             cfg = dataclasses.replace(cfg, kv_block_len=block_len)
+        if paged_attend_impl is not None:
+            cfg = dataclasses.replace(cfg, paged_attend_impl=paged_attend_impl)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -255,6 +272,21 @@ class ServeEngine:
         self.block_len = getattr(cfg, "kv_block_len", 16)
         if self.kv_impl not in ("dense", "paged"):
             raise ValueError(f"unknown kv_impl {self.kv_impl!r}")
+        self.paged_attend_impl = getattr(cfg, "paged_attend_impl", "gather")
+        if self.paged_attend_impl not in ("gather", "pallas"):
+            raise ValueError(
+                f"unknown paged_attend_impl {self.paged_attend_impl!r}")
+        if self.paged_attend_impl == "pallas" and self.kv_impl != "paged":
+            raise ValueError(
+                "paged_attend_impl='pallas' selects the block-walking "
+                "decode kernel over the paged KV plane; serve it with "
+                "kv_impl='paged' (the dense plane has no block tables)")
+        if self.paged_attend_impl == "pallas" and cfg.score_dtype != "f32":
+            # fail at init, not mid-serving out of the first decode trace
+            # (models.attention._paged_attend_impl enforces the same rule)
+            raise ValueError(
+                "paged_attend_impl='pallas' supports score_dtype='f32' "
+                f"only (got {cfg.score_dtype!r})")
         self.buckets = kvp.bucket_lengths(max_len, self.block_len)
         # Bucket-pad prefills only for attention-cache families: causal
         # attention makes the pad tail invisible to the last real position,
@@ -458,9 +490,17 @@ class ServeEngine:
                 self._queue.pop(0)
                 row = np.zeros(self.max_blocks, np.int32)
                 row[:need] = blocks
+                # tail-write trim: prefill writes for bucket-pad positions
+                # past the last real block go to scratch (see
+                # make_paged_prefill_step); decode uses the full row.
+                write_row = row.copy()
+                nb_real = kvp.blocks_needed(len(req.prompt), self.block_len)
+                nb_bucket = toks.shape[1] // self.block_len
+                write_row[nb_real:nb_bucket] = kvp.SCRATCH_BLOCK
                 logits, self._caches = self._prefill(
                     self.params, self._caches, jnp.asarray(toks),
-                    jnp.asarray(s, jnp.int32), jnp.asarray(row),
+                    jnp.asarray(s, jnp.int32), jnp.asarray(write_row),
+                    jnp.asarray(row),
                     jnp.asarray(len(req.prompt), jnp.int32))
                 first = self._sample_first(req, logits)
                 if self._finishes_at_prefill(req, first):

@@ -1,6 +1,8 @@
 """Host-side paged-KV unit tests: the bucket policy and the block
-allocator (serve/kv_pager.py). Device-side behavior (pool writes, table
-gathers, bit-identity with the dense path) lives in tests/test_serving.py."""
+allocator (serve/kv_pager.py), plus the prefill tail-write trim (pool
+write traffic for bucket-pad positions past the last real block).
+Device-side decode behavior (pool writes, table gathers, bit-identity
+with the dense path) lives in tests/test_serving.py."""
 import numpy as np
 import pytest
 
@@ -113,3 +115,94 @@ def test_freed_blocks_are_reusable():
     p.free(0)
     second = p.alloc(0, 2)
     assert sorted(first) == sorted(second)       # full reuse of the pool
+
+
+# ---------------------------------------------------------------------------
+# Prefill tail-write trim: bucket-pad positions past the last real block
+# must not burn pool write traffic (their content is never read — pad keys
+# are causally invisible to the last real position and decode overwrites
+# pad positions before the length mask exposes them).
+# ---------------------------------------------------------------------------
+def _trim_engine(block_len=4, slots=1):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import transformer as tf
+    from repro.serve.engine import ServeEngine
+
+    cfg = configs.get_smoke("yi-9b", act_impl="exact")
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=slots, max_len=64, kv_impl="paged",
+                      block_len=block_len)
+    return cfg, params, eng, jnp
+
+
+def test_prefill_tail_writes_skipped():
+    """Prompt len 5 in a 16-wide bucket at block_len=4: blocks 0-1 hold
+    real positions (ceil(5/4) = 2), blocks 2-3 are pure bucket pad — the
+    prefill must leave those pool blocks untouched (sentinel-flooded pool
+    entries survive bit-exactly), proving the pad-tail write traffic is
+    gone, while the scratch block absorbs the redirected writes."""
+    import jax
+
+    from repro.serve.engine import Request
+    from repro.serve import kv_pager as kv
+
+    cfg, params, eng, jnp = _trim_engine()
+    sentinel = 7.75
+    eng._caches = jax.tree_util.tree_map_with_path(
+        lambda p, leaf: jnp.full_like(leaf, sentinel)
+        if getattr(p[-1], "key", "").endswith("_pool") else leaf,
+        eng._caches)
+    eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32) + 1,
+                       max_new_tokens=4))
+    eng._admit()
+    owned = eng.pager.owned(0)
+    assert len(owned) >= 4                       # 16-pos bucket + decode room
+
+    def pool_views(leaf):
+        # stacked segments carry leading layer axes before the block axis
+        if leaf.shape[0] == eng.pager.num_blocks:
+            yield leaf
+        else:
+            for sub in leaf:
+                yield from pool_views(sub)
+
+    pools = [v for p, leaf in
+             jax.tree_util.tree_flatten_with_path(eng._caches)[0]
+             if getattr(p[-1], "key", "").endswith("_pool")
+             for v in pool_views(np.asarray(leaf))]
+    assert pools
+    for pool in pools:
+        # real blocks written, tail blocks still wall-to-wall sentinel
+        assert not (pool[list(owned[:2])] == sentinel).all()
+        assert (pool[list(owned[2:4])] == sentinel).all()
+        # the redirected pad writes landed in scratch block 0
+        assert not (pool[kv.SCRATCH_BLOCK] == sentinel).all()
+
+
+def test_prefill_tail_trim_does_not_change_tokens():
+    """No output change: a trimmed paged engine emits the same stream as
+    the dense engine for a prompt whose bucket has a pad tail."""
+    import jax
+
+    from repro.serve.engine import Request
+
+    cfg, params, eng, jnp = _trim_engine()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 5)
+
+    def serve(kv_impl):
+        from repro.serve.engine import ServeEngine
+
+        e = ServeEngine(cfg, params, slots=1, max_len=64, kv_impl=kv_impl,
+                        block_len=4)
+        r = Request(rid=0, prompt=prompt, max_new_tokens=8)
+        e.submit(r)
+        e.run()
+        return r.out
+
+    assert serve("paged") == serve("dense")

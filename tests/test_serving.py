@@ -313,15 +313,19 @@ def test_paged_batched_matches_sequential():
     assert batched == seq
 
 
-@pytest.mark.parametrize("kv_impl", ["dense", "paged"])
-def test_prefill_compile_count_bounded_by_buckets(kv_impl):
+@pytest.mark.parametrize("kv_impl,attend_impl", [
+    ("dense", "gather"), ("paged", "gather"), ("paged", "pallas")])
+def test_prefill_compile_count_bounded_by_buckets(kv_impl, attend_impl):
     """The bucketed-prefill guarantee, enforced: serving 7 requests with 7
     distinct prompt lengths (spanning 2 of the 3 buckets at max_len=64)
     compiles at most len(buckets) prefills — here exactly 2 — and exactly
-    2 decode variants (argmax-only + sampling), not one per length."""
+    2 decode variants (argmax-only + sampling), not one per length. Holds
+    for the block-walking kernel decode too (the kernel's shapes depend on
+    the pool geometry, never on a request's length)."""
     cfg = _cfg()
     params = tf.init(cfg, jax.random.PRNGKey(1))
-    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl=kv_impl)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl=kv_impl,
+                      paged_attend_impl=attend_impl)
     assert eng.buckets == (16, 32, 64)
     rng = np.random.default_rng(0)
     for i, plen in enumerate([3, 5, 9, 13, 16, 19, 25]):   # buckets 16 + 32
