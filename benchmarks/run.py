@@ -3,7 +3,9 @@
 Prints ``name,value,derived`` CSV rows:
     accuracy.py     — Table 2 (MAE comparison, unit + wide domains)
     resources.py    — Table 1 (resource model: op counts, ROM, VMEM)
-    latency.py      — throughput microbench (host CPU) + integer path
+    serving.py      — evaluator latency microbench (host CPU) + integer
+                      path (serving.run; the engine-level Poisson/TTFT
+                      benchmark is serving.main -> BENCH_serving.json)
     convergence.py  — Sec. 3.1 convergence behaviour & iteration tradeoff
 
 Roofline/dry-run numbers are produced by ``repro.launch.dryrun`` /
@@ -16,10 +18,10 @@ import time
 
 
 def main() -> None:
-    from benchmarks import accuracy, convergence, latency, resources
+    from benchmarks import accuracy, convergence, resources, serving
 
     rows: list = []
-    for mod in (accuracy, resources, convergence, latency):
+    for mod in (accuracy, resources, convergence, serving):
         t0 = time.time()
         mod.run(rows)
         print(f"# {mod.__name__} done in {time.time() - t0:.1f}s",

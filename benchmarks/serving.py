@@ -34,12 +34,45 @@ revision's smoke numbers on a dev host; the tolerance absorbs CI-runner
 noise while still catching a serialized decode loop or a paged gather
 going quadratic (both are >2x collapses, far past any plausible jitter).
 
+Beyond steady-state tok/s, the benchmark drives the repro.obs
+observability layer (this is the serving-latency entry point — the old
+benchmarks/latency.py evaluator microbench lives here too, see run()):
+
+``poisson``
+    An *open-loop* Poisson arrival trace (exponential inter-arrival gaps,
+    arrivals fire on schedule whether or not the engine keeps up — the
+    correct load model for latency percentiles; a closed loop would let a
+    slow engine throttle its own offered load). Reports p50/p99 TTFT and
+    TPOT out of the engine's log-bucketed histograms, goodput (tokens of
+    requests whose TTFT met the SLO, per wall second), queue-depth peak,
+    batch-occupancy mean, pool-occupancy peak, and the compile counters
+    (must stay 0 during the measured window — the engine is warmed
+    first). These are *gated*: a missing or non-finite metric fails the
+    build (PR-4 gate style); absolute latency is host-dependent and not
+    thresholded.
+
+``host_overhead_1slot``
+    The per-step phase breakdown (admit / dispatch / host_sync /
+    sample_copy mean ms) per impl at 1 slot — quantifying the carried
+    63-vs-235 tok/s paged-vs-dense low-occupancy gap as dispatch-vs-sync
+    host time, so the fix can be judged against a recorded baseline.
+
+``saturation``
+    Would-clip counts per FORMAT_PROFILES format (obs.saturation_audit)
+    over the model weights and a served log-prob sample — the software
+    analogue of the paper's overflow-free Q2.14 claim, and the telemetry
+    the quantized-KV roadmap item selects formats with.
+
 CLI: ``python benchmarks/serving.py --smoke [--out BENCH_serving.json]
-[--no-check]`` — smoke uses a smaller model + shorter generations for CI;
-the nightly workflow runs the full (non-smoke) mode and uploads the
-artifact. Timing excludes compile: a warm-up pass on the *same* engine
-compiles prefill + decode before the measured pass (jit caches are
-per-engine, so a throwaway warm-up engine would not help).
+[--no-check] [--trace-out TRACE.json] [--metrics-json METRICS.json]
+[--evaluators]`` — smoke uses a smaller model + shorter generations for
+CI; the nightly workflow runs the full (non-smoke) mode, uploads the
+artifact, and exports the Poisson run's Chrome trace (Perfetto-loadable)
+via --trace-out. Timing excludes compile: a warm-up pass on the *same*
+engine compiles prefill + decode before the measured pass (jit caches are
+per-engine, so a throwaway warm-up engine would not help), and the
+observability handle is attached *after* warm-up so histograms hold only
+steady-state samples.
 """
 from __future__ import annotations
 
@@ -53,6 +86,7 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine
@@ -154,9 +188,7 @@ def _serve_once(eng, cfg, *, requests_per_slot: int, max_new: int):
     return toks, steps, wall
 
 
-def bench(smoke: bool) -> dict:
-    cfg = _cfg(smoke)
-    params = tf.init(cfg, jax.random.PRNGKey(0))
+def bench(cfg, params, smoke: bool) -> dict:
     requests_per_slot = 2
     max_new = 8 if smoke else 32
     sampling = SamplingParams(greedy=True)
@@ -225,6 +257,205 @@ def bench(smoke: bool) -> dict:
     }
 
 
+#: engine phases whose per-step means the host-overhead section records
+PHASES = ("admit", "dispatch", "host_sync", "sample_copy")
+#: poisson-section keys the smoke gate requires present AND finite
+POISSON_GATED = ("ttft_ms.p50", "ttft_ms.p99", "tpot_ms.p50",
+                 "tpot_ms.p99", "goodput_tok_s")
+
+
+def _poisson_params(smoke: bool) -> dict:
+    # open-loop offered load: high enough that slots contend and the queue
+    # builds (the percentiles must reflect queueing, not an idle engine),
+    # low enough that the smoke trace stays a few seconds on a CI box
+    return (dict(n=16, rate_req_s=8.0, max_new=8, slots=4, slo_ms=2000.0)
+            if smoke else
+            dict(n=64, rate_req_s=12.0, max_new=32, slots=8, slo_ms=1000.0))
+
+
+def bench_poisson(cfg, params, smoke: bool, trace_out=None,
+                  metrics_json=None) -> dict:
+    """Open-loop Poisson arrival trace against the paged engine: arrivals
+    fire at pre-drawn wall-clock offsets (exponential gaps, seeded), the
+    engine steps continuously, and every latency number is read back out
+    of the repro.obs histograms the engine filled. TTFT includes queueing
+    (enqueue -> first token), which is the point of open-loop driving."""
+    pp = _poisson_params(smoke)
+    eng = ServeEngine(cfg, params, slots=pp["slots"], max_len=64,
+                      sampling=SamplingParams(greedy=True), kv_impl="paged",
+                      paged_attend_impl="gather")
+    # warm every compile (prefill bucket + decode) on a NULL-obs engine,
+    # then attach observability: the histograms see steady state only
+    _serve_once(eng, cfg, requests_per_slot=1, max_new=2)
+    ob = obs_lib.Observability(trace=trace_out is not None)
+    eng.attach_obs(ob)
+
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.0 / pp["rate_req_s"], pp["n"]))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 12))
+                                        ).astype(np.int32),
+                    max_new_tokens=pp["max_new"])
+            for i in range(pp["n"])]
+
+    t0 = time.perf_counter()
+    nxt = 0
+    while not all(r.done for r in reqs):
+        now = time.perf_counter() - t0
+        while nxt < len(reqs) and arrivals[nxt] <= now:
+            eng.submit(reqs[nxt])
+            nxt += 1
+        if not eng.step() and nxt < len(reqs):
+            # engine idle before the next arrival: sleep up to it instead
+            # of spinning (open loop — the arrival time does not move)
+            time.sleep(max(0.0, min(arrivals[nxt]
+                                    - (time.perf_counter() - t0), 0.01)))
+    wall = time.perf_counter() - t0
+
+    m = ob.metrics
+
+    def _q(name):
+        h = m.get(name)
+        return {"p50": round(h.quantile(0.50), 3),
+                "p90": round(h.quantile(0.90), 3),
+                "p99": round(h.quantile(0.99), 3),
+                "mean": round(h.mean, 3), "count": h.count}
+
+    met = [r for r in reqs
+           if (r.t_first - r.t_enqueue) * 1e3 <= pp["slo_ms"]]
+    total_toks = sum(len(r.out) for r in reqs)
+    st = eng.pager.stats()
+    res = {
+        **pp,
+        "wall_s": round(wall, 3),
+        "ttft_ms": _q("engine.ttft_ms"),
+        "tpot_ms": _q("engine.tpot_ms"),
+        "e2e_ms": _q("engine.e2e_ms"),
+        "throughput_tok_s": round(total_toks / wall, 2),
+        "goodput_tok_s": round(sum(len(r.out) for r in met) / wall, 2),
+        "slo_met_requests": len(met),
+        "queue_depth_peak": m.get("engine.queue_depth").peak,
+        "batch_occupancy_mean": round(
+            m.get("engine.batch_occupancy").mean, 3),
+        "pool": {"peak_blocks": st.peak_in_use,
+                 "num_blocks": st.num_blocks,
+                 "alloc_failures": st.alloc_failures},
+        # must be 0: the engine was warmed before obs attached, so any
+        # compile here means a shape leaked into the measured window
+        "compiles_measured": {
+            k: c.value for k, c in
+            (("prefill", m.get("engine.compiles.prefill")),
+             ("decode", m.get("engine.compiles.decode")))},
+    }
+    print(f"[serving] poisson: {pp['n']} req @ {pp['rate_req_s']}/s -> "
+          f"ttft p50/p99 {res['ttft_ms']['p50']}/{res['ttft_ms']['p99']} ms, "
+          f"tpot p50 {res['tpot_ms']['p50']} ms, "
+          f"goodput {res['goodput_tok_s']} tok/s ({len(met)}/{pp['n']} in "
+          f"SLO), queue peak {res['queue_depth_peak']}")
+    if trace_out:
+        ob.trace.export(trace_out)
+        print(f"[serving] wrote Chrome trace -> {trace_out} "
+              f"({len(ob.trace.events)} events; load at ui.perfetto.dev)")
+    if metrics_json:
+        ob.metrics.to_json(metrics_json)
+        print(f"[serving] wrote metrics snapshot -> {metrics_json}")
+    return res
+
+
+def bench_host_overhead(cfg, params, smoke: bool) -> dict:
+    """Per-step phase breakdown at 1 slot per impl — the carried
+    63-vs-235 tok/s item made measurable: how much of a paged decode step
+    is jit dispatch vs device->host sync vs host bookkeeping, recorded so
+    the gap can be judged (and closed) against numbers, not vibes."""
+    out = {}
+    max_new = 16 if smoke else 64
+    for impl_key, (kv_impl, attend_impl) in IMPLS.items():
+        eng = ServeEngine(cfg, params, slots=1, max_len=64,
+                          sampling=SamplingParams(greedy=True),
+                          kv_impl=kv_impl, paged_attend_impl=attend_impl)
+        _serve_once(eng, cfg, requests_per_slot=1, max_new=2)   # warm
+        ob = obs_lib.Observability()
+        eng.attach_obs(ob)
+        toks, steps, wall = _serve_once(eng, cfg, requests_per_slot=2,
+                                        max_new=max_new)
+        entry = {"tok_s": round(toks / wall, 2), "steps": steps}
+        for ph in PHASES:
+            h = ob.metrics.get(f"engine.phase.{ph}_ms")
+            entry[f"{ph}_ms_mean"] = round(h.mean, 4)
+        entry["step_ms_mean"] = round(
+            ob.metrics.get("engine.step_ms").mean, 4)
+        out[impl_key] = entry
+        print(f"[serving] host_overhead 1-slot {impl_key}: " +
+              " ".join(f"{ph}={entry[f'{ph}_ms_mean']}ms" for ph in PHASES))
+    out["paged_over_dense_step_ms"] = round(
+        out["paged"]["step_ms_mean"] / out["dense"]["step_ms_mean"], 3)
+    return out
+
+
+def bench_saturation(cfg, params) -> dict:
+    """FORMAT_PROFILES would-clip audit over (a) the model weights (the
+    init's gaussian tail puts ~1% of elements past the Q2.x ±2 range —
+    the number a per-tensor scale would have to absorb) and (b) a served
+    teacher-forced log-prob row, which exceeds the range almost entirely
+    (log-probs live far below -2): exactly the per-tensor telemetry a
+    format-assignment sweep (ROADMAP item 5) consumes, and the serving-
+    side analogue of the paper's overflow-free-Q2.14 domain argument."""
+    cap = 1 << 16
+    weights = np.concatenate([np.asarray(l).ravel()[:cap]
+                              for l in jax.tree.leaves(params)])
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, 16).astype(np.int32)
+    logprobs = eng.score(prompt)
+    reg = obs_lib.MetricsRegistry()
+    audit = obs_lib.saturation_audit(
+        {"weights": weights, "score_logprobs": logprobs}, registry=reg)
+    clips = {name: m.value for name, m in
+             ((n, reg.get(n)) for n in reg.names()) if "clips" in name}
+    print(f"[serving] saturation: " + ", ".join(
+        f"{p}: weights {audit[p]['weights']['clipped']}/"
+        f"{audit[p]['weights']['total']}, logprobs "
+        f"{audit[p]['score_logprobs']['clipped']}/"
+        f"{audit[p]['score_logprobs']['total']}" for p in sorted(audit)))
+    return {"profiles": audit, "clip_counters": clips}
+
+
+def check_obs_sections(res: dict) -> list:
+    """Presence/finiteness gate for the observability-driven sections —
+    missing = failure, matching the tok/s gate's missing-metric rule.
+    Latency magnitudes are host-dependent, so only existence + finiteness
+    are enforced here."""
+    bad = []
+
+    def _finite(path: str) -> None:
+        node = res
+        try:
+            for part in path.split("."):
+                node = node[part]
+        except (KeyError, TypeError):
+            bad.append((path, float("nan"), "present"))
+            return
+        try:
+            v = float(node)
+        except (TypeError, ValueError):
+            bad.append((path, float("nan"), "numeric"))
+            return
+        if not np.isfinite(v):
+            bad.append((path, v, "finite"))
+
+    for key in POISSON_GATED:
+        _finite(f"poisson.{key}")
+    _finite("poisson.pool.peak_blocks")
+    for impl in IMPL_KEYS:
+        for ph in PHASES:
+            _finite(f"host_overhead_1slot.{impl}.{ph}_ms_mean")
+    for prof in ("q2_14", "q2_20", "q2_29"):
+        for tensor in ("weights", "score_logprobs"):
+            _finite(f"saturation.profiles.{prof}.{tensor}.clipped")
+    return bad
+
+
 def check_thresholds(res: dict) -> list:
     """Returns [(metric, value, limit)] for every regressed metric; a
     BASELINES key missing from the results is itself a failure."""
@@ -249,6 +480,7 @@ def check_thresholds(res: dict) -> list:
         if value < MIN_SPEEDUP_8_OVER_1:
             bad.append((key, value, MIN_SPEEDUP_8_OVER_1))
     bad.extend(check_transient(res))
+    bad.extend(check_obs_sections(res))
     return bad
 
 
@@ -278,15 +510,81 @@ def check_transient(res: dict) -> list:
     return bad
 
 
+def run(csv_rows: list, n: int = 1_000_000, reps: int = 5) -> None:
+    """Evaluator latency microbench (the benchmarks/run.py CSV protocol;
+    formerly benchmarks/latency.py — serving.py is now the single
+    latency-measurement entry point): us per call on an n-element tensor
+    per sigmoid evaluator, host-CPU wall time. The CORDIC fixed path
+    timing on CPU reflects the emulation (26 unrolled integer stages), not
+    TPU VPU throughput — the structural VPU op count is in resources.py."""
+    import jax.numpy as jnp
+
+    from repro.core import sigmoid as S
+
+    def _time(fn, x) -> float:
+        fn(x).block_until_ready()  # compile+warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn(x).block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6  # us
+
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, n), jnp.float32)
+    cases = {
+        "exact_jnp_sigmoid": jax.jit(S.sigmoid_exact),
+        "cordic_float": jax.jit(lambda v: S.sigmoid_cordic_float(v)),
+        "cordic_fixed_q2.14": jax.jit(lambda v: S.sigmoid_cordic_fixed(v)),
+        "r2_cordic_fixed": jax.jit(lambda v: S.sigmoid_r2_cordic_fixed(v)),
+        "pwl_16seg": jax.jit(lambda v: S.sigmoid_pwl_fixed(v, 16)),
+        "lut_256": jax.jit(lambda v: S.sigmoid_lut_fixed(v, 256)),
+    }
+    for name, fn in cases.items():
+        us = _time(fn, x)
+        csv_rows.append((f"latency/{name}", round(us, 1),
+                         f"{n / us:.0f} elem/us-e6; host-CPU measurement"))
+
+    # integer end-to-end path (no float boundary) — the quantized-serving
+    # mode
+    xq = jnp.asarray(
+        np.random.default_rng(1).integers(-(1 << 14), 1 << 14, n), jnp.int32)
+    from repro.core.cordic import sigmoid_mr_q
+
+    us = _time(jax.jit(sigmoid_mr_q), xq)
+    csv_rows.append(("latency/cordic_fixed_int_io", round(us, 1),
+                     "integer in/out (quantized pipeline)"))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--no-check", action="store_true",
                     help="record only; skip the regression-threshold gate")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the Poisson run's request-lifecycle + "
+                         "engine-phase Chrome trace (Perfetto-loadable "
+                         "JSON) to this path")
+    ap.add_argument("--metrics-json", default=None,
+                    help="export the Poisson run engine's full metrics-"
+                         "registry snapshot to this path")
+    ap.add_argument("--evaluators", action="store_true",
+                    help="also run the evaluator latency microbench "
+                         "(always on in full mode; ~1M-element tensors)")
     args = ap.parse_args(argv)
 
-    res = bench(args.smoke)
+    cfg = _cfg(args.smoke)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    res = bench(cfg, params, args.smoke)
+    res["poisson"] = bench_poisson(cfg, params, args.smoke,
+                                   trace_out=args.trace_out,
+                                   metrics_json=args.metrics_json)
+    res["host_overhead_1slot"] = bench_host_overhead(cfg, params, args.smoke)
+    res["saturation"] = bench_saturation(cfg, params)
+    if args.evaluators or not args.smoke:
+        rows: list = []
+        run(rows, n=1 << 16 if args.smoke else 1_000_000,
+            reps=3 if args.smoke else 5)
+        res["evaluator_us"] = {name.split("/", 1)[1]: value
+                               for name, value, _ in rows}
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
     for impl in IMPL_KEYS:

@@ -19,6 +19,10 @@ the emitted tokens are unchanged. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
+``--metrics-json``/``--trace-out`` attach the repro.obs observability
+layer: TTFT/TPOT/e2e latency histograms with p50/p99 readout, queue and
+pool gauges, and a Chrome-trace (Perfetto-loadable) request-lifecycle
+timeline — emitted tokens are bit-identical with or without it.
 """
 import argparse
 import sys
@@ -29,6 +33,7 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
+from repro import obs as repro_obs
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine
@@ -58,6 +63,12 @@ def main():
                          "'pallas' walks live blocks in place with the "
                          "paged-attention kernel (O(block-len) transient, "
                          "same tokens). Requires --kv-impl paged")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine metrics snapshot (TTFT/TPOT "
+                         "histograms, queue/pool gauges, counters) here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace (Perfetto-loadable) JSON of "
+                         "request lifecycles + engine phase spans here")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -73,10 +84,12 @@ def main():
 
     # temperature <= 0 resolves to greedy inside SamplingParams
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
+    obs = (repro_obs.Observability(trace=args.trace_out is not None)
+           if (args.metrics_json or args.trace_out) else None)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
                       sampling=sampling, seed=args.seed,
                       kv_impl=args.kv_impl, block_len=args.block_len,
-                      paged_attend_impl=args.paged_attend_impl)
+                      paged_attend_impl=args.paged_attend_impl, obs=obs)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -101,6 +114,17 @@ def main():
         print(f"[serve_lm] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
               f"blocks x {eng.block_len} positions "
               f"(dense would pin {args.slots * 128 // eng.block_len})")
+    if obs is not None:
+        ttft = obs.metrics.get("engine.ttft_ms")
+        print(f"[serve_lm] ttft p50/p99 {ttft.quantile(0.5):.1f}/"
+              f"{ttft.quantile(0.99):.1f} ms over {ttft.count} requests")
+        if args.metrics_json:
+            obs.metrics.to_json(args.metrics_json)
+            print(f"[serve_lm] wrote metrics -> {args.metrics_json}")
+        if args.trace_out:
+            obs.trace.export(args.trace_out)
+            print(f"[serve_lm] wrote Chrome trace -> {args.trace_out} "
+                  f"(load at ui.perfetto.dev)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt={r.prompt.tolist()} -> out={r.out}")
     assert all(r.done for r in reqs)

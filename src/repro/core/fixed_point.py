@@ -63,6 +63,35 @@ Q2_20 = QFormat(total_bits=22, frac_bits=20)
 Q2_29 = QFormat(total_bits=31, frac_bits=29)
 
 
+#: Optional host-side saturation observer: ``callable(fmt_str, clipped,
+#: total)`` invoked by eager `quantize` calls whose input would clip at the
+#: format boundary — the software analogue of the paper's overflow-free
+#: Q2.14 claim, surfaced as serving telemetry by repro.obs. None (the
+#: default) costs one `is None` check; tracer inputs are always skipped,
+#: so no Python metric state is ever traced into a jitted function and
+#: attaching an observer can never add a compile.
+_SAT_OBSERVER = None
+
+
+def set_saturation_observer(observer):
+    """Install (or clear, with None) the saturation observer; returns the
+    previous one so scopes can nest (see repro.obs.observe_saturation)."""
+    global _SAT_OBSERVER
+    prev = _SAT_OBSERVER
+    _SAT_OBSERVER = observer
+    return prev
+
+
+def _note_saturation(scaled, fmt: QFormat) -> None:
+    """Count boundary clips of an *eager* quantize. ``scaled`` is the
+    rounded float code before the saturate; comparing pre-cast floats keeps
+    the count exact even for values far outside int32."""
+    if _SAT_OBSERVER is None or isinstance(scaled, jax.core.Tracer):
+        return
+    clipped = int(jnp.sum((scaled > fmt.max_int) | (scaled < fmt.min_int)))
+    _SAT_OBSERVER(str(fmt), clipped, int(scaled.size))
+
+
 def wrap(v: jax.Array, fmt: QFormat) -> jax.Array:
     """Mask an int32 lane back to `fmt.total_bits` two's complement."""
     n = fmt.total_bits
@@ -85,6 +114,7 @@ def quantize(x: jax.Array, fmt: QFormat = Q2_14, rounding: str = "nearest") -> j
         q = jnp.floor(scaled)
     else:
         raise ValueError(f"unknown rounding {rounding!r}")
+    _note_saturation(q, fmt)
     return sat(q.astype(jnp.int32), fmt)
 
 

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro import obs as repro_obs
 from repro.models import transformer as tf
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.sampling import SamplingParams
@@ -47,8 +48,19 @@ def main(argv=None):
                          "shaped transient) or the block-walking Pallas "
                          "kernel (O(block_len) transient; same tokens). "
                          "Requires --kv-impl paged")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine's metrics-registry snapshot "
+                         "(TTFT/TPOT/e2e histograms, queue depth, pool "
+                         "occupancy, compile + saturation counters) to "
+                         "this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace (Perfetto-loadable) JSON "
+                         "of request lifecycles + engine phase spans to "
+                         "this path")
     args = ap.parse_args(argv)
 
+    obs = (repro_obs.Observability(trace=args.trace_out is not None)
+           if (args.metrics_json or args.trace_out) else None)
     cfg = (configs.get_smoke(args.arch, act_impl=args.act_impl) if args.smoke
            else configs.get_config(args.arch, act_impl=args.act_impl))
     if cfg.input_mode != "tokens":
@@ -63,7 +75,7 @@ def main(argv=None):
                       sampling=sampling, kv_impl=args.kv_impl,
                       block_len=args.block_len,
                       num_blocks=args.num_blocks or None,
-                      paged_attend_impl=args.paged_attend_impl)
+                      paged_attend_impl=args.paged_attend_impl, obs=obs)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -73,7 +85,12 @@ def main(argv=None):
                                 int(rng.integers(4, 12))).astype(np.int32),
             max_new_tokens=args.max_new))
     t0 = time.time()
-    done = eng.run()
+    if obs is not None:
+        # count eager fixed-point boundary clips into the same registry
+        with repro_obs.observe_saturation(obs.metrics):
+            done = eng.run()
+    else:
+        done = eng.run()
     total = sum(len(r.out) for r in done)
     print(f"[serve] {len(done)} requests, {total} tokens, "
           f"{time.time() - t0:.1f}s")
@@ -82,6 +99,20 @@ def main(argv=None):
         print(f"[serve] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
               f"blocks x {eng.block_len} positions, "
               f"{st.allocs} allocs, {st.alloc_failures} backpressure waits")
+    if obs is not None:
+        ttft = obs.metrics.get("engine.ttft_ms")
+        tpot = obs.metrics.get("engine.tpot_ms")
+        print(f"[serve] ttft p50/p99 {ttft.quantile(0.5):.1f}/"
+              f"{ttft.quantile(0.99):.1f} ms, tpot p50 "
+              f"{tpot.quantile(0.5):.2f} ms "
+              f"({int(obs.metrics.get('engine.tokens.emitted').value)} tok)")
+        if args.metrics_json:
+            obs.metrics.to_json(args.metrics_json)
+            print(f"[serve] wrote metrics -> {args.metrics_json}")
+        if args.trace_out:
+            obs.trace.export(args.trace_out)
+            print(f"[serve] wrote Chrome trace -> {args.trace_out} "
+                  f"(load at ui.perfetto.dev)")
     assert len(done) == args.requests
     return 0
 

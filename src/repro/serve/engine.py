@@ -41,6 +41,45 @@ SamplingParams, temperature scaling runs through the CORDIC linear-rotation
 multiply by the R2-LVC reciprocal, and every request draws from its own rng
 key stream fold_in(fold_in(base, rid), t) — making the emitted tokens
 independent of slot placement, batch composition, and KV layout.
+
+Observability (repro.obs): construct the engine with ``obs=Observability()``
+(optionally ``trace=True`` for a Chrome-trace/Perfetto request-lifecycle +
+engine-phase timeline) and read ``obs.metrics.snapshot()`` afterwards. All
+instrumentation is host-side: nothing here feeds a jitted function, so
+compile counts and emitted tokens are bit-identical with observability on
+or off (CI-enforced in tests/test_obs.py). Metrics emitted:
+
+    name                              type       unit      emitted at
+    --------------------------------  ---------  --------  -----------------
+    engine.requests.submitted         counter    requests  submit()
+    engine.requests.finished          counter    requests  _finish()
+    engine.tokens.emitted             counter    tokens    admission + step()
+    engine.steps                      counter    steps     step()
+    engine.queue_depth                gauge      requests  step() (pre-admit)
+    engine.batch_occupancy            gauge      slots     step() (post-admit)
+    engine.ttft_ms                    histogram  ms        first token
+                                                           (admission prefill)
+    engine.tpot_ms                    histogram  ms        _finish() (decode
+                                                           interval mean)
+    engine.e2e_ms                     histogram  ms        _finish()
+    engine.prefill_ms                 histogram  ms        admission
+    engine.step_ms                    histogram  ms        step()
+    engine.phase.admit_ms             histogram  ms        step() span
+    engine.phase.dispatch_ms          histogram  ms        step() span (jit
+                                                           call, async)
+    engine.phase.host_sync_ms         histogram  ms        step() span
+                                                           (device->host)
+    engine.phase.sample_copy_ms       histogram  ms        step() span (host
+                                                           bookkeeping)
+    engine.compiles.prefill/.decode   counter    compiles  compile_counts()
+                                                           delta per step
+    kv.pool.blocks_in_use             gauge      blocks    KVPager alloc/free
+    kv.pool.allocs                    counter    allocs    KVPager.alloc
+    kv.pool.alloc_failures            counter    events    KVPager.alloc
+                                                           (backpressure)
+    kv.pool.blocks_freed              counter    blocks    KVPager.free
+    fixed_point.saturation.clips{fmt=Q2.14}  counter  elements  eager
+        quantize under obs.observe_saturation (plus .elements{...} totals)
 """
 from __future__ import annotations
 
@@ -51,6 +90,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.models import transformer as tf
 from repro.serve import kv_pager as kvp
 from repro.serve import sampling as sp
@@ -223,6 +263,12 @@ class Request:
     sampling: Optional[SamplingParams] = None   # None -> engine default
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle timestamps on the engine's Observability clock (seconds);
+    # -1 = stage not reached, or engine constructed without observability
+    t_enqueue: float = dataclasses.field(default=-1.0, repr=False)
+    t_admit: float = dataclasses.field(default=-1.0, repr=False)
+    t_first: float = dataclasses.field(default=-1.0, repr=False)
+    t_finish: float = dataclasses.field(default=-1.0, repr=False)
 
 
 class ServeEngine:
@@ -251,8 +297,10 @@ class ServeEngine:
                  kv_impl: Optional[str] = None,
                  block_len: Optional[int] = None,
                  num_blocks: Optional[int] = None,
-                 paged_attend_impl: Optional[str] = None):
+                 paged_attend_impl: Optional[str] = None,
+                 obs: Optional[obs_lib.Observability] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
+        self.obs = obs if obs is not None else obs_lib.NULL
         if softmax_impl is not None:
             cfg = dataclasses.replace(cfg, softmax_impl=softmax_impl)
         if loss_impl is not None:
@@ -319,7 +367,8 @@ class ServeEngine:
                 # worst-case default: every slot full-length, + scratch
                 num_blocks = slots * self.max_blocks + 1
             self.pager: Optional[kvp.KVPager] = kvp.KVPager(
-                num_blocks, self.block_len, slots)
+                num_blocks, self.block_len, slots,
+                metrics=self.obs.metrics if self.obs.enabled else None)
             self._caches = tf.init_paged_cache(
                 cfg, slots, num_blocks, self.block_len, self.max_blocks,
                 jnp.float32)
@@ -367,7 +416,81 @@ class ServeEngine:
         self._top_ks = np.zeros(slots, np.int32)
         self._greedy = np.ones(slots, bool)
 
+        self._bind_obs_handles()
+
+    def _bind_obs_handles(self) -> None:
+        # observability handles (null no-ops when obs is disabled; the
+        # metric name/type/unit table lives in the module docstring)
+        m = self.obs.metrics
+        self._m_submitted = m.counter("engine.requests.submitted",
+                                      unit="requests")
+        self._m_finished = m.counter("engine.requests.finished",
+                                     unit="requests")
+        self._m_tokens = m.counter("engine.tokens.emitted", unit="tokens")
+        self._m_steps = m.counter("engine.steps", unit="steps")
+        self._m_queue = m.gauge("engine.queue_depth", unit="requests")
+        self._m_occ = m.gauge("engine.batch_occupancy", unit="slots")
+        self._m_ttft = m.histogram("engine.ttft_ms", unit="ms")
+        self._m_tpot = m.histogram("engine.tpot_ms", unit="ms")
+        self._m_e2e = m.histogram("engine.e2e_ms", unit="ms")
+        self._m_prefill = m.histogram("engine.prefill_ms", unit="ms")
+        self._m_step = m.histogram("engine.step_ms", unit="ms")
+        self._m_compiles = {
+            "prefill": m.counter("engine.compiles.prefill", unit="compiles"),
+            "decode": m.counter("engine.compiles.decode", unit="compiles"),
+        }
+        self._last_compiles = (self.compile_counts() if self.obs.enabled
+                               else None)
+        if self.pager is not None:
+            self.pager.attach_metrics(m if self.obs.enabled else None)
+
+    def attach_obs(self, obs: Optional[obs_lib.Observability]) -> None:
+        """Attach (or replace, or with None detach) the observability
+        handle mid-lifetime — e.g. after a warm-up pass, so compile walls
+        stay out of the latency histograms. Metrics recorded so far stay
+        in the previous handle's registry; compile counters restart from
+        the current jit-cache sizes."""
+        self.obs = obs if obs is not None else obs_lib.NULL
+        self._bind_obs_handles()
+
+    def _obs_compiles(self) -> None:
+        """Fold compile_counts() deltas into compile counters + trace
+        instants — jit-cache growth observed from the host, never traced."""
+        if not self.obs.enabled:
+            return
+        counts = self.compile_counts()
+        for kind, n in counts.items():
+            d = n - self._last_compiles[kind]
+            if d > 0:
+                self._m_compiles[kind].inc(d)
+                if self.obs.trace is not None:
+                    self.obs.trace.instant(f"compile:{kind}",
+                                           self.obs.now_us(),
+                                           args={"cache_size": n})
+        self._last_compiles = counts
+
+    def _obs_prefilled(self, req: Request, first: int) -> None:
+        """Admission-side lifecycle record: prefill span, TTFT (enqueue ->
+        first token, queueing included), first-token event + compiles."""
+        if not self.obs.enabled:
+            return
+        now = self.obs.now()
+        req.t_first = now
+        self._m_prefill.observe((now - req.t_admit) * 1e3)
+        if req.t_enqueue >= 0:
+            self._m_ttft.observe((now - req.t_enqueue) * 1e3)
+        self._m_tokens.inc()
+        self.obs.request_span("prefill", req.rid, req.t_admit)
+        self.obs.request_event("first_token", req.rid, {"token": first})
+        self._obs_compiles()
+
     def submit(self, req: Request) -> None:
+        if self.obs.enabled:
+            req.t_enqueue = self.obs.now()
+            self._m_submitted.inc()
+            self.obs.request_event("enqueue", req.rid,
+                                   {"prompt_len": len(req.prompt),
+                                    "max_new_tokens": req.max_new_tokens})
         self._queue.append(req)
 
     def score(self, prompt: np.ndarray) -> np.ndarray:
@@ -394,6 +517,18 @@ class ServeEngine:
 
     def _finish(self, req: Request) -> None:
         req.done = True
+        if self.obs.enabled:
+            req.t_finish = self.obs.now()
+            self._m_finished.inc()
+            if req.t_enqueue >= 0:
+                self._m_e2e.observe((req.t_finish - req.t_enqueue) * 1e3)
+            if req.t_first >= 0 and len(req.out) > 1:
+                # mean decode interval: first token is TTFT's, the rest
+                # amortize the decode steps (the standard TPOT definition)
+                self._m_tpot.observe((req.t_finish - req.t_first)
+                                     / (len(req.out) - 1) * 1e3)
+            self.obs.request_event("finish", req.rid,
+                                   {"tokens": len(req.out)})
         self._done.append(req)
 
     def _release_slot(self, s: int) -> None:
@@ -467,12 +602,16 @@ class ServeEngine:
         for s in range(self.slots):
             while self._active[s] is None and self._queue:
                 req = self._queue.pop(0)
+                if self.obs.enabled:
+                    req.t_admit = self.obs.now()
+                    self.obs.request_event("admit", req.rid, {"slot": s})
                 cache = tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
                 toks = self._padded_prompt(req)
                 logits, cache = self._prefill(
                     self.params, cache, {"tokens": jnp.asarray(toks)},
                     jnp.asarray(len(req.prompt), jnp.int32))
                 first = self._sample_first(req, logits)
+                self._obs_prefilled(req, first)
                 if self._finishes_at_prefill(req, first):
                     continue                      # slot stays free; try next
                 self._caches = tf.insert_slot(self._caches, cache, s)
@@ -488,6 +627,10 @@ class ServeEngine:
                 if blocks is None:
                     return      # FIFO backpressure: head waits for frees
                 self._queue.pop(0)
+                if self.obs.enabled:
+                    req.t_admit = self.obs.now()
+                    self.obs.request_event("admit", req.rid,
+                                           {"slot": s, "blocks": need})
                 row = np.zeros(self.max_blocks, np.int32)
                 row[:need] = blocks
                 # tail-write trim: prefill writes for bucket-pad positions
@@ -503,6 +646,7 @@ class ServeEngine:
                     jnp.asarray(row),
                     jnp.asarray(len(req.prompt), jnp.int32))
                 first = self._sample_first(req, logits)
+                self._obs_prefilled(req, first)
                 if self._finishes_at_prefill(req, first):
                     self._release_slot(s)         # blocks back; try next
                     continue
@@ -538,8 +682,18 @@ class ServeEngine:
         block), so the dispatch count and the compiled shape never depend
         on occupancy.
         """
-        self._admit()
+        ob = self.obs
+        t_step = ob.now()
+        self._m_steps.inc()
+        self._m_queue.set(len(self._queue))     # backlog before admission
+        with ob.phase("admit"):
+            self._admit()
         active = [s for s in range(self.slots) if self._active[s] is not None]
+        self._m_occ.set(len(active))
+        if ob.trace is not None:
+            ob.trace.counter("engine.load", ob.now_us(),
+                             {"queue_depth": len(self._queue),
+                              "batch_occupancy": len(active)})
         if not active:
             if self._queue and self.pager is not None:
                 raise RuntimeError(
@@ -547,22 +701,34 @@ class ServeEngine:
                     f"needs {self._blocks_for(self._queue[0])} KV blocks, "
                     f"pool has {self.pager.num_blocks - 1} allocatable")
             return 0
-        nxt, self._caches = self._decode(
-            self.params, self._caches, jnp.asarray(self._next_tok),
-            jnp.asarray(self._rids), jnp.asarray(self._steps),
-            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
-            jnp.asarray(self._greedy), self._base_key)
-        nxt = np.asarray(nxt)
-        for s in active:
-            req = self._active[s]
-            tok = int(nxt[s])
-            req.out.append(tok)
-            self._next_tok[s, 0] = tok
-            self._steps[s] = len(req.out)
-            if (self.eos is not None and tok == self.eos) or \
-                    len(req.out) >= req.max_new_tokens:
-                self._finish(req)
-                self._release_slot(s)
+        # phase spans: dispatch ends when jax hands back async futures,
+        # host_sync is the device->host block on the sampled tokens,
+        # sample_copy is pure host bookkeeping over the active slots
+        with ob.phase("dispatch"):
+            nxt, self._caches = self._decode(
+                self.params, self._caches, jnp.asarray(self._next_tok),
+                jnp.asarray(self._rids), jnp.asarray(self._steps),
+                jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+                jnp.asarray(self._greedy), self._base_key)
+        with ob.phase("host_sync"):
+            nxt = np.asarray(nxt)
+        with ob.phase("sample_copy"):
+            for s in active:
+                req = self._active[s]
+                tok = int(nxt[s])
+                req.out.append(tok)
+                self._next_tok[s, 0] = tok
+                self._steps[s] = len(req.out)
+                ob.request_event("token", req.rid,
+                                 {"step": len(req.out), "token": tok})
+                if (self.eos is not None and tok == self.eos) or \
+                        len(req.out) >= req.max_new_tokens:
+                    self._finish(req)
+                    self._release_slot(s)
+        if ob.enabled:
+            self._m_tokens.inc(len(active))
+            self._m_step.observe((ob.now() - t_step) * 1e3)
+            self._obs_compiles()
         return len(active)
 
     def run(self) -> List[Request]:

@@ -88,7 +88,8 @@ class KVPager:
     requests is therefore ``num_blocks - 1``.
     """
 
-    def __init__(self, num_blocks: int, block_len: int, slots: int):
+    def __init__(self, num_blocks: int, block_len: int, slots: int,
+                 metrics=None):
         if num_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (one is scratch)")
         if block_len < 1:
@@ -103,6 +104,21 @@ class KVPager:
         self._peak = 0
         self._allocs = 0
         self._failures = 0
+        self.attach_metrics(metrics)
+
+    def attach_metrics(self, metrics) -> None:
+        """Bind pool gauges/counters to a repro.obs MetricsRegistry (None
+        detaches: updates become no-ops through the null registry)."""
+        if metrics is None:
+            from repro.obs.metrics import NULL_REGISTRY
+            metrics = NULL_REGISTRY
+        self._m_in_use = metrics.gauge("kv.pool.blocks_in_use",
+                                       unit="blocks")
+        self._m_allocs = metrics.counter("kv.pool.allocs", unit="allocs")
+        self._m_failures = metrics.counter("kv.pool.alloc_failures",
+                                           unit="events")
+        self._m_freed = metrics.counter("kv.pool.blocks_freed",
+                                        unit="blocks")
 
     # -- queries ------------------------------------------------------------
     @property
@@ -142,15 +158,21 @@ class KVPager:
             raise ValueError(f"allocation must be >= 1 block, got {n}")
         if n > len(self._free):
             self._failures += 1
+            self._m_failures.inc()        # backpressure stall: head waits
             return None
         blocks = [self._free.pop() for _ in range(n)]
         self._owned[slot] = blocks
         self._allocs += 1
         self._peak = max(self._peak, self.blocks_in_use)
+        self._m_allocs.inc()
+        self._m_in_use.set(self.blocks_in_use)
         return list(blocks)
 
     def free(self, slot: int) -> int:
         """Release every block held by ``slot``; returns how many."""
         blocks = self._owned.pop(slot, [])
         self._free.extend(reversed(blocks))
+        if blocks:
+            self._m_freed.inc(len(blocks))
+            self._m_in_use.set(self.blocks_in_use)
         return len(blocks)
