@@ -51,6 +51,19 @@ benchmarks/latency.py evaluator microbench lives here too, see run()):
     build (PR-4 gate style); absolute latency is host-dependent and not
     thresholded.
 
+``mixed_chunked``
+    The chunked-prefill acceptance trace: ONE seeded open-loop arrival
+    trace mixing long (~bucket-max) and short prompts, served twice on
+    the paged engine — unchunked (legacy single-shot admission) and
+    chunked (``prefill_chunk`` + multi-row batched prefill). Gated on
+    both axes of the contract: the two runs' token streams must be
+    bit-identical (scheduling must never change outputs), and the
+    short-request p99 TTFT must improve by >= MIN_SHORT_TTFT_SPEEDUP
+    (the point of chunking: a long prompt streams in across iterations
+    instead of stalling every short request behind its full-width
+    prefill). The speedup is a ratio of two runs on the same host in the
+    same process, so it holds on any runner class.
+
 ``host_overhead_1slot``
     The per-step phase breakdown (admit / dispatch / host_sync /
     sample_copy mean ms) per impl at 1 slot — quantifying the carried
@@ -299,19 +312,9 @@ def bench_poisson(cfg, params, smoke: bool, trace_out=None,
                     max_new_tokens=pp["max_new"])
             for i in range(pp["n"])]
 
-    t0 = time.perf_counter()
-    nxt = 0
-    while not all(r.done for r in reqs):
-        now = time.perf_counter() - t0
-        while nxt < len(reqs) and arrivals[nxt] <= now:
-            eng.submit(reqs[nxt])
-            nxt += 1
-        if not eng.step() and nxt < len(reqs):
-            # engine idle before the next arrival: sleep up to it instead
-            # of spinning (open loop — the arrival time does not move)
-            time.sleep(max(0.0, min(arrivals[nxt]
-                                    - (time.perf_counter() - t0), 0.01)))
-    wall = time.perf_counter() - t0
+    # open loop: arrivals fire on schedule; an idle engine sleeps up to
+    # the next arrival instead of spinning (the arrival time never moves)
+    wall = _drive_open_loop(eng, reqs, arrivals)
 
     m = ob.metrics
 
@@ -361,6 +364,138 @@ def bench_poisson(cfg, params, smoke: bool, trace_out=None,
         ob.metrics.to_json(metrics_json)
         print(f"[serving] wrote metrics snapshot -> {metrics_json}")
     return res
+
+
+#: minimum short-request p99-TTFT improvement the chunked engine must
+#: deliver over the unchunked engine on the same mixed trace — a same-
+#: process ratio, host-speed-invariant. The workload is built to deliver
+#: a wide margin (long prefills dominate the unchunked iteration time);
+#: 2x is the contract floor, not the expectation.
+MIN_SHORT_TTFT_SPEEDUP = 2.0
+
+
+def _mixed_trace(cfg, smoke: bool):
+    """Seeded mixed long/short request trace + open-loop arrival offsets.
+    Longs sit near the engine's largest bucket (their single-shot prefill
+    is the stall chunking removes); shorts are prompt-trivial and TTFT-
+    sensitive. Deterministic: both engine runs serve identical requests
+    at identical offsets."""
+    n_long, n_short = (5, 10) if smoke else (8, 24)
+    rate = 12.0 if smoke else 18.0
+    rng = np.random.default_rng(11)
+    kinds = [True] * n_long + [False] * n_short
+    rng.shuffle(kinds)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, len(kinds)))
+
+    def reqs():
+        r = np.random.default_rng(13)
+        out = []
+        for i, is_long in enumerate(kinds):
+            plen = (int(r.integers(900, 1001)) if is_long
+                    else int(r.integers(4, 13)))
+            out.append(Request(
+                rid=i, prompt=r.integers(0, cfg.vocab_size,
+                                         plen).astype(np.int32),
+                max_new_tokens=2 if is_long else 8))
+        return out
+
+    return kinds, arrivals, reqs
+
+
+def _drive_open_loop(eng, reqs, arrivals):
+    """Open-loop replay: submit each request at its pre-drawn offset while
+    stepping continuously (arrivals never wait for the engine)."""
+    t0 = time.perf_counter()
+    nxt = 0
+    while not all(r.done for r in reqs):
+        now = time.perf_counter() - t0
+        while nxt < len(reqs) and arrivals[nxt] <= now:
+            eng.submit(reqs[nxt])
+            nxt += 1
+        if not eng.step() and nxt < len(reqs):
+            time.sleep(max(0.0, min(arrivals[nxt]
+                                    - (time.perf_counter() - t0), 0.01)))
+    return time.perf_counter() - t0
+
+
+def bench_mixed_chunked(cfg, params, smoke: bool) -> dict:
+    """Chunked vs unchunked on ONE mixed long/short trace (module
+    docstring, ``mixed_chunked``): same seeded requests and arrival
+    offsets, paged engine both times; report per-class TTFT percentiles,
+    the short-request p99 speedup, and whether the token streams are
+    bit-identical."""
+    # the long prompts' single-shot prefill must dominate a decode step
+    # for the stall to be visible: at max_len=1024 the full-width prefill
+    # is ~two orders of magnitude over one decode dispatch on this model
+    max_len, chunk = 1024, 64
+    kinds, arrivals, mk_reqs = _mixed_trace(cfg, smoke)
+
+    def serve(prefill_chunk):
+        eng = ServeEngine(cfg, params, slots=4, max_len=max_len,
+                          sampling=SamplingParams(greedy=True),
+                          kv_impl="paged", prefill_chunk=prefill_chunk)
+        # warm every measured shape before TTFT is measured: a burst pass
+        # (all slots contended -> widest pow2 row groups compile) plus an
+        # open-loop replay of the very trace (the admission cadence the
+        # measured run will see, covering the remaining group shapes)
+        for r in mk_reqs():
+            eng.submit(r)
+        eng.run()
+        _drive_open_loop(eng, mk_reqs(), arrivals)
+        reqs = mk_reqs()
+        wall = _drive_open_loop(eng, reqs, arrivals)
+        return eng, reqs, wall
+
+    out = {}
+    toks = {}
+    for key, chunk_arg in (("unchunked", None), ("chunked", chunk)):
+        eng, reqs, wall = serve(chunk_arg)
+        toks[key] = [list(r.out) for r in reqs]
+        ttft = {is_long: [(r.t_first - r.t_enqueue) * 1e3
+                          for r, il in zip(reqs, kinds) if il == is_long]
+                for is_long in (True, False)}
+        out[key] = {
+            "wall_s": round(wall, 3),
+            "short_ttft_ms": {
+                "p50": round(float(np.percentile(ttft[False], 50)), 3),
+                "p99": round(float(np.percentile(ttft[False], 99)), 3)},
+            "long_ttft_ms": {
+                "p50": round(float(np.percentile(ttft[True], 50)), 3),
+                "p99": round(float(np.percentile(ttft[True], 99)), 3)},
+            "prefill_compiles": eng.compile_counts()["prefill"],
+        }
+    res = {
+        "n_long": sum(kinds), "n_short": len(kinds) - sum(kinds),
+        "max_len": max_len, "prefill_chunk": chunk,
+        "tokens_identical": int(toks["chunked"] == toks["unchunked"]),
+        "short_ttft_p99_speedup": round(
+            out["unchunked"]["short_ttft_ms"]["p99"]
+            / out["chunked"]["short_ttft_ms"]["p99"], 3),
+        **out,
+    }
+    print(f"[serving] mixed_chunked: short p99 TTFT "
+          f"{out['unchunked']['short_ttft_ms']['p99']}ms unchunked -> "
+          f"{out['chunked']['short_ttft_ms']['p99']}ms chunked "
+          f"(x{res['short_ttft_p99_speedup']}), tokens identical: "
+          f"{bool(res['tokens_identical'])}")
+    return res
+
+
+def check_mixed_chunked(res: dict) -> list:
+    """The chunked-prefill gate: bit-identical tokens AND the short-
+    request p99 TTFT speedup floor. Missing section = failure."""
+    sec = res.get("mixed_chunked")
+    if not isinstance(sec, dict):
+        return [("mixed_chunked/<missing>", float("nan"), float("nan"))]
+    bad = []
+    if sec.get("tokens_identical") != 1:
+        bad.append(("mixed_chunked/tokens_identical",
+                    float(sec.get("tokens_identical", float("nan"))), 1.0))
+    spd = float(sec.get("short_ttft_p99_speedup", float("nan")))
+    if not (spd >= MIN_SHORT_TTFT_SPEEDUP):
+        bad.append(("mixed_chunked/short_ttft_p99_speedup", spd,
+                    MIN_SHORT_TTFT_SPEEDUP))
+    return bad
 
 
 def bench_host_overhead(cfg, params, smoke: bool) -> dict:
@@ -481,6 +616,7 @@ def check_thresholds(res: dict) -> list:
             bad.append((key, value, MIN_SPEEDUP_8_OVER_1))
     bad.extend(check_transient(res))
     bad.extend(check_obs_sections(res))
+    bad.extend(check_mixed_chunked(res))
     return bad
 
 
@@ -577,6 +713,7 @@ def main(argv=None) -> int:
     res["poisson"] = bench_poisson(cfg, params, args.smoke,
                                    trace_out=args.trace_out,
                                    metrics_json=args.metrics_json)
+    res["mixed_chunked"] = bench_mixed_chunked(cfg, params, args.smoke)
     res["host_overhead_1slot"] = bench_host_overhead(cfg, params, args.smoke)
     res["saturation"] = bench_saturation(cfg, params)
     if args.evaluators or not args.smoke:

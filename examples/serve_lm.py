@@ -15,7 +15,11 @@ swaps the paged decode's full-table gather for the block-walking Pallas
 kernel (kernels/paged_attention.py): each slot walks only its *live* KV
 blocks — one block in VMEM per grid step, online softmax in f32 scratch —
 so the per-step transient working set no longer scales with max_len, and
-the emitted tokens are unchanged. Sampling runs on the CORDIC datapath
+the emitted tokens are unchanged. ``--prefill-chunk`` turns on the
+iteration-level scheduler's chunked prefill (serve/scheduler.py): long
+prompts stream in as block-aligned chunks interleaved with decode steps,
+so short requests' TTFT stays flat behind a long prompt — emitted tokens
+still bit-identical. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
@@ -63,6 +67,15 @@ def main():
                          "'pallas' walks live blocks in place with the "
                          "paged-attention kernel (O(block-len) transient, "
                          "same tokens). Requires --kv-impl paged")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: prompts longer than this stream "
+                         "in as block-aligned chunks interleaved with "
+                         "decode (same tokens). 0 = off")
+    ap.add_argument("--prefill-batch", type=int, default=0,
+                    help="max prefill rows per multi-row paged dispatch "
+                         "(0 = auto)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="per-iteration prefill token budget (0 = unlimited)")
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine metrics snapshot (TTFT/TPOT "
                          "histograms, queue/pool gauges, counters) here")
@@ -89,7 +102,11 @@ def main():
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=128,
                       sampling=sampling, seed=args.seed,
                       kv_impl=args.kv_impl, block_len=args.block_len,
-                      paged_attend_impl=args.paged_attend_impl, obs=obs)
+                      paged_attend_impl=args.paged_attend_impl,
+                      prefill_chunk=args.prefill_chunk or None,
+                      prefill_batch=args.prefill_batch or None,
+                      max_prefill_tokens=args.max_prefill_tokens or None,
+                      obs=obs)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

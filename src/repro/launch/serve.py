@@ -48,6 +48,18 @@ def main(argv=None):
                          "shaped transient) or the block-walking Pallas "
                          "kernel (O(block_len) transient; same tokens). "
                          "Requires --kv-impl paged")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: prompts longer than this stream "
+                         "in as block-aligned chunks interleaved with "
+                         "decode steps (serve/scheduler.py; same tokens). "
+                         "0 = off (single-shot bucketed prefill)")
+    ap.add_argument("--prefill-batch", type=int, default=0,
+                    help="max scheduled prefill rows packed into one "
+                         "multi-row paged dispatch (0 = auto: slots when "
+                         "chunking a paged engine, else 1)")
+    ap.add_argument("--max-prefill-tokens", type=int, default=0,
+                    help="per-iteration prefill token budget across "
+                         "scheduled rows (0 = unlimited)")
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine's metrics-registry snapshot "
                          "(TTFT/TPOT/e2e histograms, queue depth, pool "
@@ -75,7 +87,11 @@ def main(argv=None):
                       sampling=sampling, kv_impl=args.kv_impl,
                       block_len=args.block_len,
                       num_blocks=args.num_blocks or None,
-                      paged_attend_impl=args.paged_attend_impl, obs=obs)
+                      paged_attend_impl=args.paged_attend_impl,
+                      prefill_chunk=args.prefill_chunk or None,
+                      prefill_batch=args.prefill_batch or None,
+                      max_prefill_tokens=args.max_prefill_tokens or None,
+                      obs=obs)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

@@ -150,9 +150,14 @@ def _pool_write(pool, tables, lens, new):
                   ``lens`` (block ``tables[b, lens//L]``, offset ``lens%L``).
                   Vacant slots carry an all-zero table, so their garbage
                   write lands in the reserved scratch block 0.
-    S % L == 0  — block-aligned prefill from position 0 (the engine admits
-                  into an empty slot, so ``lens`` is 0): whole blocks are
-                  scattered through the first S/L table entries.
+    S % L == 0  — block-aligned prefill starting at the (block-aligned)
+                  position ``lens``: whole blocks are scattered through
+                  table entries ``lens//L .. lens//L + S/L``. A fresh
+                  admission writes from ``lens == 0`` (the first S/L
+                  entries, exactly as before); a chunked-prefill
+                  continuation resumes at the chunk frontier. The caller
+                  guarantees ``lens % L == 0`` and ``lens + S`` within the
+                  table, so the clip mode below never actually clips.
     """
     B, S = new.shape[:2]
     L = pool.shape[1]
@@ -162,8 +167,10 @@ def _pool_write(pool, tables, lens, new):
         return pool.at[blk, lens % L].set(new[:, 0].astype(pool.dtype))
     assert S % L == 0, f"prefill width {S} not a multiple of block_len {L}"
     nb = S // L
+    idx = (lens // L)[:, None] + jnp.arange(nb)[None, :]        # (B, nb)
+    blk = jnp.take_along_axis(tables, idx, axis=1, mode="clip")
     blocks = new.reshape((B * nb, L) + new.shape[2:]).astype(pool.dtype)
-    return pool.at[tables[:, :nb].reshape(-1)].set(blocks)
+    return pool.at[blk.reshape(-1)].set(blocks)
 
 
 def _pool_gather(pool, tables):

@@ -358,6 +358,95 @@ def paged_set_slot(cfg, cache, slot, table_row, length) -> Any:
     return out
 
 
+def paged_pool_view(cfg, cache, tables, lens) -> Any:
+    """Batch-R view over the global pools with *caller-supplied* block-table
+    rows (multi-row batched / chunked prefill).
+
+    Unlike paged_slot_view — which gathers one slot's row out of the cache —
+    the table rows and lengths come by value, one per prefill row: ``tables``
+    is (R, max_blocks) int32 and ``lens`` is (R,) int32 (the block-aligned
+    chunk start; 0 for a fresh admission). Pad rows point every entry at the
+    scratch block, so their pool writes land in garbage space and nothing
+    they read is ever treated as valid. Pool leaves pass through whole.
+    Paged serving is attention-only (the engine enforces this), so every
+    segment must be a PAGED_CACHE_FNS block.
+    """
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        if blk not in PAGED_CACHE_FNS:
+            raise NotImplementedError(
+                "multi-row paged prefill requires an attention-only arch; "
+                f"segment {key} is {blk}")
+
+        def f(p, leaf, c=count):
+            k = getattr(p[-1], "key", None)
+            if k == "tables":
+                t = tables
+            elif k == "lens":
+                t = lens
+            else:
+                return leaf
+            t = t.astype(leaf.dtype)
+            return jnp.broadcast_to(t, (c,) + t.shape) if c > 1 else t
+
+        out[key] = jax.tree_util.tree_map_with_path(f, seg)
+    return out
+
+
+def paged_pool_merge(cfg, cache, view) -> Any:
+    """Write the pools of an updated batch-R view (from paged_pool_view +
+    apply) back into the full cache tree. Only pool leaves carry new state —
+    the view's tables/lens were passed by value and are discarded; slot
+    registration happens separately through paged_set_rows."""
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        out[key] = jax.tree_util.tree_map_with_path(
+            lambda p, full, one: one if _is_pool_leaf(p) else full,
+            seg, view[key])
+    return out
+
+
+def paged_set_rows(cfg, cache, slot_ids, rows, lengths, valid) -> Any:
+    """Masked multi-row paged_set_slot: for each prefill row ``r`` with
+    ``valid[r]``, set slot ``slot_ids[r]``'s block-table row to ``rows[r]``
+    and its length to ``lengths[r]`` across every attention segment.
+
+    Implemented as R one-hot masked selects (R is a static batch dim, tiny)
+    rather than a scatter: pad rows (``valid[r] == False``) may alias a live
+    slot id without clobbering it, and duplicate ids resolve in row order
+    deterministically. slot_ids (R,), rows (R, max_blocks), lengths (R,),
+    valid (R,) — all traced.
+    """
+    R = rows.shape[0]
+
+    def f(p, leaf, count):
+        k = getattr(p[-1], "key", None)
+        if k not in ("tables", "lens"):
+            return leaf
+        slots = leaf.shape[1] if count > 1 else leaf.shape[0]
+        for r in range(R):
+            hit = (jnp.arange(slots) == slot_ids[r]) & valid[r]     # (slots,)
+            if k == "tables":
+                mask = hit[:, None]                                 # (S, 1)
+                upd = rows[r][None, :].astype(leaf.dtype)           # (1, M)
+            else:
+                mask = hit                                          # (S,)
+                upd = lengths[r].astype(leaf.dtype)
+            if count > 1:
+                mask, upd = mask[None], upd[None]
+            leaf = jnp.where(mask, upd, leaf)
+        return leaf
+
+    out: Dict[str, Any] = {}
+    for key, blk, count, axis, seg in _paged_seg_iter(cfg, cache):
+        if blk in PAGED_CACHE_FNS:
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda p, leaf, c=count: f(p, leaf, c), seg)
+        else:
+            out[key] = seg
+    return out
+
+
 def override_cache_length(cache, length) -> Any:
     """Force every position counter ('idx' dense / 'lens' paged) to
     ``length``. Bucketed prefill pads the prompt to a bucket width, so the

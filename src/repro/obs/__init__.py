@@ -83,6 +83,14 @@ class Observability:
         self.trace: Optional[TraceRecorder] = (
             TraceRecorder(process_name) if trace else None)
 
+    @property
+    def epoch(self) -> float:
+        """Absolute ``time.perf_counter()`` value of this handle's clock
+        origin. The engine stamps request lifecycle times with the absolute
+        clock (so stamps survive a later attach_obs); ``t_abs - epoch``
+        converts one to this handle's trace timeline."""
+        return self._t0
+
     def now(self) -> float:
         """Seconds since this handle was constructed (monotonic)."""
         return self._clock() - self._t0
@@ -133,6 +141,7 @@ class _NullObservability:
     enabled = False
     metrics = NULL_REGISTRY
     trace = None
+    epoch = 0.0
 
     def now(self) -> float:
         return 0.0

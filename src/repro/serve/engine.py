@@ -36,6 +36,44 @@ not N — plus exactly two decode variants (argmax-only and sampling).
 Bucketing (and with it the paged plane) is attention-family only: a
 recurrent scan has no causal mask to hide a pad tail, so mamba/xlstm archs
 prefill at exact length on the dense plane, exactly as before.
+
+*When* prompts prefill is decided per iteration by the iteration-level
+scheduler (serve.scheduler.IterationScheduler, Orca/Sarathi/vLLM shape):
+every ``step()`` runs a prefill phase (chunk continuations first, then
+FIFO admissions, under a ``max_prefill_tokens`` budget) before its single
+batched decode dispatch. Two knobs extend the legacy one-prompt-per-
+dispatch admission:
+
+``prefill_chunk=C``   — prompts longer than C stream in as block-aligned
+    C-wide chunks, one per iteration, interleaved with decode steps, so a
+    long prompt no longer stalls every decoding slot for its whole
+    prefill and short requests' TTFT stays flat. Mid-prefill slots are
+    excluded from decode (their chunks re-pin the length counter each
+    dispatch); the final chunk pins the true length and emits the first
+    token. Compile widths stay bounded: {buckets <= C} ∪ {C}.
+``prefill_batch=R``   — paged mode packs up to R scheduled rows into ONE
+    multi-row prefill dispatch (make_paged_prefill_step binds R block-
+    table rows by value; pad rows write to scratch), pow2-padded so
+    compile batch dims are bounded by log2(R)+1.
+
+Both default off (chunk=None, batch=1): shapes, dispatch order, and tokens
+are then bit-for-bit the legacy path. With them on, emitted tokens stay
+bit-identical to the unchunked engine — the KV prefix written is the same
+bytes, pad keys are causally invisible (exact 0.0 softmax weights), and
+per-request key streams make sampling independent of scheduling — which
+tests/test_scheduler.py enforces for greedy + seeded sampling, GQA + MLA,
+dense + paged. One documented carve-out: capacity-factor MoE routing
+(models/moe.py) computes its per-expert capacity from the dispatch width
+(``C = ceil(S*K*cap/E)``) and queues tokens per apply, so a GShard MoE
+arch's routing — like under any batch-size change — is not invariant to
+how a prompt is split into chunks; the attention/KV plane is.
+
+``submit()`` validates rather than trusting ``step()`` to survive: an
+empty or over-max_len prompt, or a paged request whose worst-case block
+footprint exceeds pool capacity (it could never be admitted and would
+head-of-line-block the queue forever), is rejected immediately —
+``req.error`` set, ``req.done=True``, returned from ``run()`` with the
+finished requests — and the engine keeps serving everyone else.
 Sampling (serve.sampling) stays per-slot: each request carries its own
 SamplingParams, temperature scaling runs through the CORDIC linear-rotation
 multiply by the R2-LVC reciprocal, and every request draws from its own rng
@@ -52,7 +90,16 @@ or off (CI-enforced in tests/test_obs.py). Metrics emitted:
     name                              type       unit      emitted at
     --------------------------------  ---------  --------  -----------------
     engine.requests.submitted         counter    requests  submit()
+    engine.requests.rejected          counter    requests  submit()
+                                                           (validation fail)
     engine.requests.finished          counter    requests  _finish()
+    engine.prefill.dispatches         counter    calls     prefill phase (one
+                                                           per jit dispatch)
+    engine.prefill.rows               counter    rows      prefill phase
+                                                           (scheduled rows)
+    engine.prefill.chunks             counter    rows      prefill phase
+                                                           (chunked-prompt
+                                                           rows only)
     engine.tokens.emitted             counter    tokens    admission + step()
     engine.steps                      counter    steps     step()
     engine.queue_depth                gauge      requests  step() (pre-admit)
@@ -84,6 +131,7 @@ or off (CI-enforced in tests/test_obs.py). Metrics emitted:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -95,6 +143,7 @@ from repro.models import transformer as tf
 from repro.serve import kv_pager as kvp
 from repro.serve import sampling as sp
 from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import IterationScheduler, PrefillRow
 
 
 def make_prefill_step(cfg):
@@ -105,46 +154,79 @@ def make_prefill_step(cfg):
 
 
 def make_bucketed_prefill_step(cfg):
-    """Dense prefill over a bucket-padded prompt: the returned function
-    takes the *real* prompt length, hands back the logits at the last real
-    position, and pins the cache position counters to it — the pad tail is
-    causally invisible to that row and is overwritten by decode writes, so
-    padding never changes the emitted tokens. One compile per bucket width
-    instead of one per distinct prompt length."""
-    def prefill(params, cache, batch, true_len):
+    """Dense prefill over one bucket-padded prompt segment: runs the
+    segment through the cache, pins the cache position counters to
+    ``pin_len`` and hands back the logits row at ``logit_idx``.
+
+    Single-shot (the legacy path): the segment is the whole bucket-padded
+    prompt, ``pin_len`` is the real prompt length and ``logit_idx`` is its
+    last real position — the pad tail is causally invisible to that row
+    and is overwritten by decode writes, so padding never changes the
+    emitted tokens. One compile per bucket width instead of one per
+    distinct prompt length.
+
+    Chunked prefill reuses the same function per chunk: a mid-prompt chunk
+    pins ``pin_len`` to the chunk frontier (its logits are discarded, so
+    ``logit_idx`` is any in-range row) and the final chunk pins the true
+    length and indexes the last real position relative to its own start.
+    """
+    def prefill(params, cache, batch, pin_len, logit_idx):
         logits, _, cache = tf.apply(params, batch, cfg, cache=cache)
-        cache = tf.override_cache_length(cache, true_len)
-        last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+        cache = tf.override_cache_length(cache, pin_len)
+        last = jax.lax.dynamic_index_in_dim(logits, logit_idx, axis=1,
                                             keepdims=False)
         return last, cache
     return prefill
 
 
 def make_paged_prefill_step(cfg):
-    """Admission prefill straight into pool blocks: binds the slot's block
-    table, runs the bucket-padded prefill through a batch-1 slot view
-    (fresh recurrent state, shared pools), writes the updated pools + slot
-    rows back, and pins the slot length to the real prompt length. No
-    dense max_len cache is materialized and nothing is copied at insert.
+    """Multi-row prefill straight into pool blocks: R scheduled prompt
+    segments (whole prompts, or ``prefill_chunk``-wide chunks of longer
+    ones) run as ONE batch-R apply against the shared pools. No dense
+    max_len cache is materialized and nothing is copied at insert.
 
-    Tail-write trim: the prefill runs against ``write_row``, whose entries
-    past the last block holding a *real* prompt position are redirected to
-    the scratch block — bucket-pad positions past that block scatter into
-    scratch instead of burning pool write traffic on blocks whose content
-    would never be read (pad keys are causally invisible to the last real
-    position, and decode overwrites pad positions before the length mask
-    ever exposes them).  ``full_row`` — the real allocation — is bound
-    afterwards so decode writes land in live blocks."""
-    def prefill(params, caches, tokens, slot, write_row, full_row, true_len):
-        caches = tf.paged_set_slot(cfg, caches, slot, write_row,
-                                   jnp.zeros((), jnp.int32))
-        view = tf.paged_slot_view(cfg, caches, slot)
+    Per row ``r`` of the dispatch:
+        tokens[r]     — (W,) bucket/chunk-padded segment tokens
+        slot_ids[r]   — the seated slot
+        view_rows[r]  — block-table row the apply reads/writes through:
+                        the slot's real allocation up to the last block
+                        holding a position this row can see, every entry
+                        past that redirected to the scratch block (the
+                        tail-write trim: pad positions scatter into
+                        scratch instead of burning pool traffic on blocks
+                        whose content is never read). Pad rows (R is
+                        pow2-padded) are all-scratch.
+        full_rows[r]  — the slot's real allocation, registered on the
+                        device after the apply so decode writes land in
+                        live blocks
+        start_lens[r] — first position this segment covers (0 for a fresh
+                        admission, the chunk frontier for a continuation);
+                        block-aligned, feeds RoPE positions + pool-write
+                        offsets
+        pin_lens[r]   — length the slot is pinned to afterwards: the true
+                        prompt length on a final row, the new chunk
+                        frontier mid-prompt
+        logit_idx[r]  — segment-relative row of the logits to return (the
+                        last real position on final rows; discarded
+                        otherwise)
+        valid[r]      — False for pad rows: their slot registration is
+                        masked out entirely, so a pad row may alias a live
+                        slot id without clobbering it
+
+    Tables/lens enter the apply *by value* (paged_pool_view) rather than
+    through a device gather, so pad rows never read or corrupt real slot
+    state; only the pools carry updates back (paged_pool_merge) and slot
+    registration is a separate masked write (paged_set_rows)."""
+    def prefill(params, caches, tokens, slot_ids, view_rows, full_rows,
+                start_lens, pin_lens, logit_idx, valid):
+        view = tf.paged_pool_view(cfg, caches, view_rows, start_lens)
         logits, _, nview = tf.apply(params, {"tokens": tokens}, cfg,
                                     cache=view)
-        caches = tf.paged_slot_merge(cfg, caches, nview, slot)
-        caches = tf.paged_set_slot(cfg, caches, slot, full_row, true_len)
-        last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
-                                            keepdims=False)
+        caches = tf.paged_pool_merge(cfg, caches, nview)
+        caches = tf.paged_set_rows(cfg, caches, slot_ids, full_rows,
+                                   pin_lens, valid)
+        last = jax.vmap(lambda row, i: jax.lax.dynamic_index_in_dim(
+            row, i, axis=0, keepdims=False))(logits, logit_idx)
         return last, caches
     return prefill
 
@@ -263,8 +345,12 @@ class Request:
     sampling: Optional[SamplingParams] = None   # None -> engine default
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    # lifecycle timestamps on the engine's Observability clock (seconds);
-    # -1 = stage not reached, or engine constructed without observability
+    #: set when submit() rejects the request (over-long prompt, impossible
+    #: block footprint, ...); a rejected request is done with out == []
+    error: Optional[str] = None
+    # lifecycle timestamps: absolute time.perf_counter() seconds, stamped
+    # unconditionally (obs attached or not, so a post-warm-up attach_obs
+    # still observes requests queued earlier); -1 = stage not reached
     t_enqueue: float = dataclasses.field(default=-1.0, repr=False)
     t_admit: float = dataclasses.field(default=-1.0, repr=False)
     t_first: float = dataclasses.field(default=-1.0, repr=False)
@@ -298,6 +384,9 @@ class ServeEngine:
                  block_len: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  paged_attend_impl: Optional[str] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefill_batch: Optional[int] = None,
+                 max_prefill_tokens: Optional[int] = None,
                  obs: Optional[obs_lib.Observability] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
         self.obs = obs if obs is not None else obs_lib.NULL
@@ -349,6 +438,26 @@ class ServeEngine:
                                  else SamplingParams(temperature=temperature,
                                                      greedy=greedy))
         self._base_key = jax.random.PRNGKey(seed)
+        # iteration-level prefill policy (serve/scheduler.py): chunk
+        # continuations + FIFO admissions under a token budget. With
+        # chunk=None / batch=1 (the defaults) the plan degenerates to the
+        # legacy one-single-shot-prompt-per-dispatch admission, bit-for-bit.
+        self.scheduler = IterationScheduler(
+            buckets=self.buckets if self._bucketed else None,
+            block_len=self.block_len, max_len=max_len,
+            prefill_chunk=prefill_chunk,
+            max_prefill_tokens=max_prefill_tokens)
+        self.prefill_chunk = prefill_chunk
+        if prefill_batch is None:
+            prefill_batch = (slots if (prefill_chunk is not None
+                                       and self.kv_impl == "paged") else 1)
+        if prefill_batch < 1:
+            raise ValueError(f"prefill_batch must be >= 1, got {prefill_batch}")
+        if prefill_batch > 1 and self.kv_impl != "paged":
+            # dense prefill builds one fresh cache per request; batching
+            # rows is a paged-plane feature (multi-row block-table binding)
+            prefill_batch = 1
+        self.prefill_batch = int(prefill_batch)
 
         if self.kv_impl == "paged":
             if not self._bucketed:
@@ -405,9 +514,14 @@ class ServeEngine:
         self._decode_jits = (greedy_fn, sample_fn)
         self._sample = jax.jit(sp.sample_batched)
         self._score = jax.jit(make_score_step(cfg))
-        self._queue: List[Request] = []
         self._done: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
+        # per-slot full block-table rows (paged; built at admission, reused
+        # by every chunk dispatch) and mid-prefill partial caches (dense
+        # chunking; held host-side, inserted into the stacked tree only
+        # when the final chunk lands)
+        self._slot_rows: Dict[int, np.ndarray] = {}
+        self._pending: Dict[int, Any] = {}
         self._next_tok = np.zeros((slots, 1), np.int32)
         # per-slot host state mirrored into the batched decode each step
         self._rids = np.zeros(slots, np.int32)
@@ -424,8 +538,14 @@ class ServeEngine:
         m = self.obs.metrics
         self._m_submitted = m.counter("engine.requests.submitted",
                                       unit="requests")
+        self._m_rejected = m.counter("engine.requests.rejected",
+                                     unit="requests")
         self._m_finished = m.counter("engine.requests.finished",
                                      unit="requests")
+        self._m_pre_disp = m.counter("engine.prefill.dispatches",
+                                     unit="calls")
+        self._m_pre_rows = m.counter("engine.prefill.rows", unit="rows")
+        self._m_pre_chunks = m.counter("engine.prefill.chunks", unit="rows")
         self._m_tokens = m.counter("engine.tokens.emitted", unit="tokens")
         self._m_steps = m.counter("engine.steps", unit="steps")
         self._m_queue = m.gauge("engine.queue_depth", unit="requests")
@@ -470,28 +590,79 @@ class ServeEngine:
         self._last_compiles = counts
 
     def _obs_prefilled(self, req: Request, first: int) -> None:
-        """Admission-side lifecycle record: prefill span, TTFT (enqueue ->
-        first token, queueing included), first-token event + compiles."""
+        """Prefill-completion lifecycle record: prefill span (admit ->
+        first token, chunk interleaving included), TTFT (enqueue -> first
+        token, queueing included), first-token event + compiles. The
+        timestamp is stamped whether obs is attached or not."""
+        now = time.perf_counter()
+        req.t_first = now
         if not self.obs.enabled:
             return
-        now = self.obs.now()
-        req.t_first = now
         self._m_prefill.observe((now - req.t_admit) * 1e3)
         if req.t_enqueue >= 0:
             self._m_ttft.observe((now - req.t_enqueue) * 1e3)
         self._m_tokens.inc()
-        self.obs.request_span("prefill", req.rid, req.t_admit)
+        # stamps are absolute perf_counter values; the trace timeline is
+        # relative to this obs handle's epoch (clamped: a request admitted
+        # before a later attach_obs starts its span at the epoch)
+        self.obs.request_span("prefill", req.rid,
+                              max(0.0, req.t_admit - self.obs.epoch))
         self.obs.request_event("first_token", req.rid, {"token": first})
         self._obs_compiles()
 
-    def submit(self, req: Request) -> None:
+    @property
+    def _queue(self):
+        """Pending (validated, unadmitted) requests — the scheduler's FIFO
+        deque. Exposed for introspection; mutate only through submit()."""
+        return self.scheduler.queue
+
+    def _validate(self, req: Request) -> Optional[str]:
+        """Reason this request can never be served, or None if admissible.
+        Catching these at submit() keeps one bad request from killing (or
+        permanently head-of-line-blocking) the serving loop: an over-long
+        prompt used to raise ValueError out of bucket_for deep inside
+        step(), and an over-capacity paged request was only detected once
+        the engine went fully idle."""
+        plen = len(req.prompt)
+        if plen < 1:
+            return "empty prompt"
+        if plen > self.max_len:
+            return (f"prompt length {plen} exceeds engine max_len "
+                    f"{self.max_len}")
+        if self.pager is not None:
+            need = self._blocks_for(req)
+            if need > self.pager.capacity:
+                return (f"needs {need} KV blocks, pool has "
+                        f"{self.pager.capacity} allocatable")
+        return None
+
+    def _reject(self, req: Request, reason: str) -> None:
+        req.error = f"rejected at submit: {reason}"
+        req.done = True
+        self._m_submitted.inc()
+        self._m_rejected.inc()
         if self.obs.enabled:
-            req.t_enqueue = self.obs.now()
-            self._m_submitted.inc()
+            self.obs.request_event("reject", req.rid, {"reason": reason})
+        self._done.append(req)
+
+    def submit(self, req: Request) -> None:
+        """Validate and enqueue one request. Inadmissible requests are
+        rejected immediately (``req.error`` set, ``done=True``, surfaced in
+        ``run()``'s result) — the engine keeps serving. Budgets that would
+        decode past max_len are truncated here, once, not re-scanned per
+        admission."""
+        req.t_enqueue = time.perf_counter()
+        err = self._validate(req)
+        if err is not None:
+            self._reject(req, err)
+            return
+        self._clamp_budget(req)
+        self._m_submitted.inc()
+        if self.obs.enabled:
             self.obs.request_event("enqueue", req.rid,
                                    {"prompt_len": len(req.prompt),
                                     "max_new_tokens": req.max_new_tokens})
-        self._queue.append(req)
+        self.scheduler.enqueue(req)
 
     def score(self, prompt: np.ndarray) -> np.ndarray:
         """(S,) int32 prompt -> (S-1,) per-token log-probs (teacher-forced),
@@ -507,9 +678,14 @@ class ServeEngine:
     def compile_counts(self) -> Dict[str, int]:
         """Jit-cache sizes of the serving datapath — the bucketed-prefill
         guarantee made checkable: after serving any mix of prompt lengths,
-        ``prefill <= len(self.buckets)`` and ``decode <= 2`` (argmax-only
-        + sampling variants). The prefill bound holds for attention-family
-        archs; recurrent archs prefill at exact length (see _bucketed)."""
+        ``prefill <= len(self.buckets) * chunk-variants`` and
+        ``decode <= 2`` (argmax-only + sampling variants). Unchunked
+        single-row serving (the defaults) keeps the tight legacy bound
+        ``prefill <= len(self.buckets)``; chunking adds at most the chunk
+        width, and multi-row batching multiplies by the pow2 batch dims
+        (<= log2(prefill_batch)+1) — still O(log), never per-prompt-length.
+        The prefill bound holds for attention-family archs; recurrent
+        archs prefill at exact length (see _bucketed)."""
         return {
             "prefill": int(self._prefill._cache_size()),
             "decode": int(sum(fn._cache_size() for fn in self._decode_jits)),
@@ -517,8 +693,8 @@ class ServeEngine:
 
     def _finish(self, req: Request) -> None:
         req.done = True
+        req.t_finish = time.perf_counter()
         if self.obs.enabled:
-            req.t_finish = self.obs.now()
             self._m_finished.inc()
             if req.t_enqueue >= 0:
                 self._m_e2e.observe((req.t_finish - req.t_enqueue) * 1e3)
@@ -538,6 +714,9 @@ class ServeEngine:
         reallocated); sampling knobs reset to greedy defaults so a vacated
         sampling slot can't pin _dispatch off the cheap all-greedy compile."""
         self._active[s] = None
+        self._slot_rows.pop(s, None)
+        self._pending.pop(s, None)
+        self.scheduler.drop_slot(s)
         if self.pager is not None:
             self.pager.free(s)
             self._caches = self._clear_slot(self._caches,
@@ -556,16 +735,6 @@ class ServeEngine:
                            jnp.full((1,), top_k, jnp.int32),
                            jnp.full((1,), greedy, bool))
         return int(tok[0])
-
-    def _padded_prompt(self, req: Request) -> np.ndarray:
-        """(1, width) int32 prompt, padded to its length bucket for
-        attention-family archs (exact length otherwise — see _bucketed)."""
-        plen = len(req.prompt)
-        width = (kvp.bucket_for(plen, self.buckets) if self._bucketed
-                 else plen)
-        toks = np.zeros((1, width), np.int32)
-        toks[0, :plen] = np.asarray(req.prompt, np.int32)
-        return toks
 
     def _blocks_for(self, req: Request) -> int:
         """Pool blocks a request can ever touch: the bucket-padded prefill
@@ -598,112 +767,192 @@ class ServeEngine:
             return True
         return False
 
-    def _admit_dense(self) -> None:
-        for s in range(self.slots):
-            while self._active[s] is None and self._queue:
-                req = self._queue.pop(0)
-                if self.obs.enabled:
-                    req.t_admit = self.obs.now()
-                    self.obs.request_event("admit", req.rid, {"slot": s})
-                cache = tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
-                toks = self._padded_prompt(req)
-                logits, cache = self._prefill(
-                    self.params, cache, {"tokens": jnp.asarray(toks)},
-                    jnp.asarray(len(req.prompt), jnp.int32))
-                first = self._sample_first(req, logits)
-                self._obs_prefilled(req, first)
-                if self._finishes_at_prefill(req, first):
-                    continue                      # slot stays free; try next
-                self._caches = tf.insert_slot(self._caches, cache, s)
-                self._register_slot(s, req, first)
-
-    def _admit_paged(self) -> None:
-        for s in range(self.slots):
-            while self._active[s] is None and self._queue:
-                req = self._queue[0]
-                toks = self._padded_prompt(req)
-                need = self._blocks_for(req)
-                blocks = self.pager.alloc(s, need)
-                if blocks is None:
-                    return      # FIFO backpressure: head waits for frees
-                self._queue.pop(0)
-                if self.obs.enabled:
-                    req.t_admit = self.obs.now()
-                    self.obs.request_event("admit", req.rid,
-                                           {"slot": s, "blocks": need})
-                row = np.zeros(self.max_blocks, np.int32)
-                row[:need] = blocks
-                # tail-write trim: prefill writes for bucket-pad positions
-                # past the last real block go to scratch (see
-                # make_paged_prefill_step); decode uses the full row.
-                write_row = row.copy()
-                nb_real = kvp.blocks_needed(len(req.prompt), self.block_len)
-                nb_bucket = toks.shape[1] // self.block_len
-                write_row[nb_real:nb_bucket] = kvp.SCRATCH_BLOCK
-                logits, self._caches = self._prefill(
-                    self.params, self._caches, jnp.asarray(toks),
-                    jnp.asarray(s, jnp.int32), jnp.asarray(write_row),
-                    jnp.asarray(row),
-                    jnp.asarray(len(req.prompt), jnp.int32))
-                first = self._sample_first(req, logits)
-                self._obs_prefilled(req, first)
-                if self._finishes_at_prefill(req, first):
-                    self._release_slot(s)         # blocks back; try next
-                    continue
-                self._register_slot(s, req, first)
-
     def _clamp_budget(self, req: Request) -> None:
         """Truncate max_new_tokens so decode can never write past max_len:
         positions written are prompt..prompt+max_new-2, so the budget caps
         at max_len - len(prompt) + 1. Without this the dense path clamps
         its update into the last position and the paged path's clipped
         table index overwrites a live block — garbage either way, and
-        differently, which would break the bit-identity contract."""
+        differently, which would break the bit-identity contract. Applied
+        once at submit()."""
         req.max_new_tokens = min(req.max_new_tokens,
                                  self.max_len - len(req.prompt) + 1)
 
-    def _admit(self) -> None:
-        """Fill free slots from the queue (bucket-padded prefill + first
-        token; paged mode also binds freshly allocated pool blocks).
-        Budgets that would decode past max_len are truncated to fit."""
-        for req in self._queue:
-            self._clamp_budget(req)
-        if self.kv_impl == "paged":
-            self._admit_paged()
+    # -- the per-iteration prefill phase ------------------------------------
+    def _admit_slot(self, req: Request) -> Optional[int]:
+        """Scheduler seating callback: pick a free slot and (paged)
+        allocate the request's worst-case blocks. None = cannot seat right
+        now (no free slot, or pool backpressure — the head waits, FIFO)."""
+        s = next((i for i in range(self.slots)
+                  if self._active[i] is None), None)
+        if s is None:
+            return None
+        need = 0
+        if self.pager is not None:
+            need = self._blocks_for(req)
+            blocks = self.pager.alloc(s, need)
+            if blocks is None:
+                return None
+            row = np.zeros(self.max_blocks, np.int32)
+            row[:need] = blocks
+            self._slot_rows[s] = row
+        self._active[s] = req
+        req.t_admit = time.perf_counter()
+        if self.obs.enabled:
+            ev = {"slot": s}
+            if self.pager is not None:
+                ev["blocks"] = need
+            self.obs.request_event("admit", req.rid, ev)
+        return s
+
+    def _complete_prefill(self, req: Request, s: int, logits) -> None:
+        """Final prefill row landed: sample the first token; the slot joins
+        decode next iteration (or frees immediately on eos / budget-1)."""
+        first = self._sample_first(req, logits)
+        self._obs_prefilled(req, first)
+        if self._finishes_at_prefill(req, first):
+            self._release_slot(s)
         else:
-            self._admit_dense()
+            self._register_slot(s, req, first)
+
+    def _dispatch_prefill_paged(self, group: List[PrefillRow]) -> None:
+        """One multi-row prefill dispatch over up to ``prefill_batch``
+        scheduled rows, pow2-padded with all-scratch pad rows so compile
+        batch dims stay bounded (see make_paged_prefill_step)."""
+        rp = 1
+        while rp < len(group):
+            rp *= 2
+        width = max(r.width for r in group)
+        toks = np.zeros((rp, width), np.int32)
+        slot_ids = np.zeros(rp, np.int32)
+        view_rows = np.full((rp, self.max_blocks), kvp.SCRATCH_BLOCK,
+                            np.int32)
+        full_rows = np.zeros((rp, self.max_blocks), np.int32)
+        starts = np.zeros(rp, np.int32)
+        pins = np.zeros(rp, np.int32)
+        lidx = np.zeros(rp, np.int32)
+        valid = np.zeros(rp, bool)
+        for i, row in enumerate(group):
+            plen = len(row.req.prompt)
+            hi = min(plen, row.start + width)
+            seg = np.asarray(row.req.prompt[row.start:hi], np.int32)
+            toks[i, :len(seg)] = seg
+            frow = self._slot_rows[row.slot]
+            # tail-write trim: entries past the last block holding a
+            # position this row can see go to scratch
+            nb_live = kvp.blocks_needed(hi, self.block_len)
+            view_rows[i, :nb_live] = frow[:nb_live]
+            full_rows[i] = frow
+            slot_ids[i] = row.slot
+            starts[i] = row.start
+            pins[i] = plen if row.final else row.start + row.width
+            lidx[i] = (plen - 1 - row.start) if row.final else 0
+            valid[i] = True
+        self._m_pre_disp.inc()
+        logits, self._caches = self._prefill(
+            self.params, self._caches, jnp.asarray(toks),
+            jnp.asarray(slot_ids), jnp.asarray(view_rows),
+            jnp.asarray(full_rows), jnp.asarray(starts),
+            jnp.asarray(pins), jnp.asarray(lidx), jnp.asarray(valid))
+        for i, row in enumerate(group):
+            if row.final:
+                self._complete_prefill(row.req, row.slot, logits[i:i + 1])
+
+    def _dispatch_prefill_dense(self, row: PrefillRow) -> None:
+        """One dense prefill row. A fresh row starts from an empty batch-1
+        cache; a chunk continuation resumes the host-held partial cache.
+        The cache only enters the stacked decode tree (insert_slot) when
+        the final chunk lands — mid-prefill state never rides in decode."""
+        req, s = row.req, row.slot
+        plen = len(req.prompt)
+        cache = (tf.init_cache(self.cfg, 1, self.max_len, jnp.float32)
+                 if row.fresh else self._pending.pop(s))
+        toks = np.zeros((1, row.width), np.int32)
+        hi = min(plen, row.start + row.width)
+        seg = np.asarray(req.prompt[row.start:hi], np.int32)
+        toks[0, :len(seg)] = seg
+        pin = plen if row.final else row.start + row.width
+        li = (plen - 1 - row.start) if row.final else row.width - 1
+        self._m_pre_disp.inc()
+        logits, cache = self._prefill(
+            self.params, cache, {"tokens": jnp.asarray(toks)},
+            jnp.asarray(pin, jnp.int32), jnp.asarray(li, jnp.int32))
+        if row.final:
+            self._caches = tf.insert_slot(self._caches, cache, s)
+            self._complete_prefill(req, s, logits)
+        else:
+            self._pending[s] = cache
+
+    def _prefill_phase(self) -> int:
+        """Run this iteration's scheduled prefill rows; returns how many.
+        Paged rows pack into multi-row dispatches of up to prefill_batch;
+        dense rows dispatch one at a time (fresh cache per request)."""
+        rows = self.scheduler.plan(self._admit_slot)
+        if not rows:
+            return 0
+        self._m_pre_rows.inc(len(rows))
+        n_chunked = sum(1 for r in rows if not (r.fresh and r.final))
+        if n_chunked:
+            self._m_pre_chunks.inc(n_chunked)
+        if self.kv_impl == "paged":
+            for i in range(0, len(rows), self.prefill_batch):
+                self._dispatch_prefill_paged(rows[i:i + self.prefill_batch])
+        else:
+            for row in rows:
+                self._dispatch_prefill_dense(row)
+        return len(rows)
 
     def step(self) -> int:
-        """One batched decode step across all slots; returns #active.
+        """One engine iteration: the scheduler's prefill phase (chunk
+        continuations + admissions), then one batched decode step across
+        all decodable slots. Returns the number of slots that advanced
+        (decoded slots, or scheduled prefill rows on a prefill-only
+        iteration) — 0 means no work was, or could be, done.
 
-        Exactly ONE jitted decode call regardless of slot count: inactive
-        slots ride along (their output is ignored; dense slots are
-        re-prefilled at admission, paged slots write into the scratch
-        block), so the dispatch count and the compiled shape never depend
-        on occupancy.
+        At most ONE jitted decode call regardless of slot count: inactive
+        and mid-prefill slots ride along (their output is ignored; dense
+        slots are re-prefilled at insert, paged slots' garbage writes land
+        in scratch or in positions a later chunk/decode write overwrites
+        before the length mask exposes them), so the dispatch count and
+        the compiled shape never depend on occupancy. An iteration whose
+        only work is prefill (e.g. a long prompt still chunking, nothing
+        decodable yet) skips the decode dispatch entirely.
         """
         ob = self.obs
-        t_step = ob.now()
+        t_step = time.perf_counter()
         self._m_steps.inc()
         self._m_queue.set(len(self._queue))     # backlog before admission
         with ob.phase("admit"):
-            self._admit()
-        active = [s for s in range(self.slots) if self._active[s] is not None]
-        self._m_occ.set(len(active))
+            n_rows = self._prefill_phase()
+        chunking = self.scheduler.chunking
+        decodable = [s for s in range(self.slots)
+                     if self._active[s] is not None and s not in chunking]
+        self._m_occ.set(len(decodable))
         if ob.trace is not None:
             ob.trace.counter("engine.load", ob.now_us(),
                              {"queue_depth": len(self._queue),
-                              "batch_occupancy": len(active)})
-        if not active:
-            if self._queue and self.pager is not None:
-                raise RuntimeError(
-                    f"request {self._queue[0].rid} can never be admitted: "
-                    f"needs {self._blocks_for(self._queue[0])} KV blocks, "
-                    f"pool has {self.pager.num_blocks - 1} allocatable")
-            return 0
+                              "batch_occupancy": len(decodable)})
+        if not decodable:
+            if n_rows == 0:
+                if self._queue and self.pager is not None:
+                    # defensive backstop: submit() rejects requests that
+                    # can never fit, so a stuck idle queue means the pool
+                    # invariants were bypassed
+                    raise RuntimeError(
+                        f"request {self._queue[0].rid} can never be "
+                        f"admitted: needs "
+                        f"{self._blocks_for(self._queue[0])} KV blocks, "
+                        f"pool has {self.pager.capacity} allocatable")
+                return 0
+            # prefill-only iteration: chunks advanced (or every admitted
+            # request finished at prefill); no decode work exists yet
+            if ob.enabled:
+                self._m_step.observe((time.perf_counter() - t_step) * 1e3)
+                self._obs_compiles()
+            return n_rows
         # phase spans: dispatch ends when jax hands back async futures,
         # host_sync is the device->host block on the sampled tokens,
-        # sample_copy is pure host bookkeeping over the active slots
+        # sample_copy is pure host bookkeeping over the decodable slots
         with ob.phase("dispatch"):
             nxt, self._caches = self._decode(
                 self.params, self._caches, jnp.asarray(self._next_tok),
@@ -713,7 +962,7 @@ class ServeEngine:
         with ob.phase("host_sync"):
             nxt = np.asarray(nxt)
         with ob.phase("sample_copy"):
-            for s in active:
+            for s in decodable:
                 req = self._active[s]
                 tok = int(nxt[s])
                 req.out.append(tok)
@@ -726,14 +975,15 @@ class ServeEngine:
                     self._finish(req)
                     self._release_slot(s)
         if ob.enabled:
-            self._m_tokens.inc(len(active))
-            self._m_step.observe((ob.now() - t_step) * 1e3)
+            self._m_tokens.inc(len(decodable))
+            self._m_step.observe((time.perf_counter() - t_step) * 1e3)
             self._obs_compiles()
-        return len(active)
+        return len(decodable)
 
     def run(self) -> List[Request]:
-        """Serve until queue and slots drain; returns the finished requests
-        (every submitted request, in completion order)."""
+        """Serve until queue and slots drain; returns every submitted
+        request in completion order — including requests submit() rejected
+        (``req.error`` set, ``out == []``)."""
         while self._queue or any(a is not None for a in self._active):
             self.step()
         done, self._done = self._done, []

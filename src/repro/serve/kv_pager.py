@@ -122,6 +122,14 @@ class KVPager:
 
     # -- queries ------------------------------------------------------------
     @property
+    def capacity(self) -> int:
+        """Blocks allocatable to requests (pool minus the scratch block).
+        A request whose worst-case footprint exceeds this can *never* be
+        admitted — the engine rejects it at submit() instead of letting it
+        head-of-line-block the queue forever."""
+        return self.num_blocks - 1
+
+    @property
     def blocks_in_use(self) -> int:
         return sum(len(v) for v in self._owned.values())
 

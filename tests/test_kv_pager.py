@@ -159,7 +159,7 @@ def test_prefill_tail_writes_skipped():
         eng._caches)
     eng.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32) + 1,
                        max_new_tokens=4))
-    eng._admit()
+    eng._prefill_phase()
     owned = eng.pager.owned(0)
     assert len(owned) >= 4                       # 16-pos bucket + decode room
 

@@ -331,6 +331,32 @@ def test_pager_backpressure_metric():
     assert ob.metrics.get("kv.pool.blocks_in_use").peak == 3.0
 
 
+def test_requests_submitted_before_attach_obs_keep_latency_stats():
+    """The t_enqueue regression: submit() only stamped the enqueue time
+    when observability was already attached, so requests queued before a
+    post-warm-up attach_obs silently vanished from the TTFT and e2e
+    histograms. Stamps are now unconditional: requests submitted *before*
+    attach_obs still land in both histograms after it."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(5))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged")
+    reqs = _requests(cfg, 3, max_new=3)
+    for r in reqs:
+        eng.submit(r)                    # queued with NO obs attached
+    ob = obs_lib.Observability(trace=True)
+    eng.attach_obs(ob)
+    steps = 0
+    while eng.step():
+        steps += 1
+        assert steps < 500
+    assert all(r.done for r in reqs)
+    m = ob.metrics
+    assert m.get("engine.ttft_ms").count == 3
+    assert m.get("engine.e2e_ms").count == 3
+    for r in reqs:
+        assert 0 < r.t_enqueue <= r.t_admit <= r.t_first <= r.t_finish
+
+
 def test_attach_obs_after_warmup():
     """attach_obs swaps the handle mid-lifetime: the new registry sees
     only post-attach traffic and no compile events for warm shapes."""

@@ -1,0 +1,406 @@
+"""Iteration-level scheduler tests (serve/scheduler.py + the chunked /
+multi-request prefill paths in serve/engine.py):
+
+* scheduler unit behavior — chunk geometry validation, single-shot vs
+  chunked admission widths, continuations-before-admissions ordering,
+  the max_prefill_tokens budget (with guaranteed progress), FIFO
+  backpressure via the admit callback;
+* chunked-prefill bit-identity — the acceptance bar: chunked (and
+  multi-row batched) serving emits token streams bit-identical to the
+  unchunked engine, greedy AND seeded sampling, GQA and MLA attention,
+  dense and paged KV planes;
+* TTFT flatness — a short prompt submitted behind a long chunking prompt
+  gets its first token within a bounded number of iterations instead of
+  waiting out the whole long prefill;
+* compile bounds — chunking/batching keep the prefill jit cache bounded
+  by bucket x chunk-width x pow2-batch variants, decode stays at <= 2;
+* submit()-validation regressions — over-long and empty prompts are
+  rejected cleanly at submit instead of raising out of step(), budgets
+  are clamped once at submit, the queue is a deque, and lifecycle
+  timestamps are stamped whether observability is attached or not.
+
+MoE carve-out: capacity-factor MoE (models/moe.py) sizes its per-expert
+queues from the dispatch width (C = ceil(S*K*cap/E)), so routing — like
+under any batch-size change — is not invariant to how a prompt is split
+into chunks. The MLA identity tests therefore run MLA attention with the
+dense FFN (block_pattern mla_dense), which is chunk-exact; full MoE archs
+serve chunked with numerically-close but not bitwise-equal streams.
+"""
+import dataclasses
+import os
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import IterationScheduler
+
+# like tests/test_serving.py: the conformance CI lane re-runs this file
+# once per datapath backend with the matching attention softmax, so a
+# chunked-identity drift in one backend is attributed there
+_SOFTMAX_BY_BACKEND = {None: "exact", "jnp": "cordic_fixed",
+                       "pallas_interpret": "cordic_pallas"}
+_BACKEND = os.environ.get("REPRO_TEST_BACKEND")
+assert _BACKEND in _SOFTMAX_BY_BACKEND, \
+    f"REPRO_TEST_BACKEND={_BACKEND!r} not in " \
+    f"{sorted(filter(None, _SOFTMAX_BY_BACKEND))}"
+
+
+def _cfg(arch="yi-9b"):
+    cfg = dataclasses.replace(configs.get_smoke(arch, act_impl="exact"),
+                              softmax_impl=_SOFTMAX_BY_BACKEND[_BACKEND])
+    if arch == "deepseek-v2-lite-16b":
+        # MLA attention with the dense FFN: chunk-exact (see module
+        # docstring for the MoE capacity carve-out)
+        cfg = dataclasses.replace(
+            cfg, block_pattern=("mla_dense",) * cfg.num_layers)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Scheduler unit behavior (pure host logic, no jax)
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    kw.setdefault("buckets", (16, 32, 64))
+    kw.setdefault("block_len", 16)
+    kw.setdefault("max_len", 64)
+    return IterationScheduler(**kw)
+
+
+def _req(rid, plen):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32))
+
+
+def test_scheduler_validates_chunk_geometry():
+    with pytest.raises(ValueError, match="bucketed"):
+        _sched(buckets=None, prefill_chunk=16)
+    with pytest.raises(ValueError, match="multiple of block_len"):
+        _sched(prefill_chunk=10)
+    with pytest.raises(ValueError, match="chunk coverage"):
+        IterationScheduler(buckets=(16, 32, 48), block_len=16, max_len=48,
+                           prefill_chunk=32)
+    with pytest.raises(ValueError, match="max_prefill_tokens"):
+        _sched(max_prefill_tokens=0)
+
+
+def test_scheduler_single_shot_and_admission_width():
+    s = _sched(prefill_chunk=16)
+    assert s.single_shot(10) and s.admission_width(10) == 16
+    assert s.single_shot(16) and s.admission_width(16) == 16
+    assert not s.single_shot(17) and s.admission_width(17) == 16
+    assert not s.single_shot(40) and s.admission_width(40) == 16
+    # chunking off: every prompt is single-shot at its bucket width
+    u = _sched()
+    assert u.single_shot(40) and u.admission_width(40) == 64
+    # recurrent (bucketless): exact length, never chunked
+    r = _sched(buckets=None)
+    assert r.single_shot(23) and r.admission_width(23) == 23
+
+
+def test_scheduler_chunk_wider_than_smallest_bucket():
+    # plen 20 -> bucket 32 > chunk 32? no: chunk 32, bucket_for(20)=32
+    # equal is single-shot; plen 10 -> bucket 16 <= chunk 32 single-shot
+    s = _sched(prefill_chunk=32)
+    assert s.single_shot(20) and s.admission_width(20) == 32
+    assert s.single_shot(33) is False and s.admission_width(33) == 32
+
+
+def test_scheduler_plan_continuations_before_admissions():
+    s = _sched(prefill_chunk=16)
+    s.enqueue(_req(0, 40))          # 3 chunks
+    s.enqueue(_req(1, 5))           # single-shot
+    slots = iter(range(8))
+    rows = s.plan(lambda r: next(slots))
+    assert [(r.req.rid, r.start, r.final, r.fresh) for r in rows] == \
+        [(0, 0, False, True), (1, 0, True, True)]
+    assert set(s.chunking) == {0}
+    rows = s.plan(lambda r: next(slots))
+    assert [(r.req.rid, r.start, r.final) for r in rows] == [(0, 16, False)]
+    rows = s.plan(lambda r: next(slots))
+    assert [(r.req.rid, r.start, r.final) for r in rows] == [(0, 32, True)]
+    assert s.chunking == {} and s.plan(lambda r: next(slots)) == []
+
+
+def test_scheduler_budget_caps_rows_but_guarantees_progress():
+    s = _sched(prefill_chunk=16, max_prefill_tokens=16)
+    s.enqueue(_req(0, 40))
+    s.enqueue(_req(1, 5))
+    slots = iter(range(8))
+    rows = s.plan(lambda r: next(slots))       # budget: chunk0 of rid 0 only
+    assert [(r.req.rid, r.start) for r in rows] == [(0, 0)]
+    rows = s.plan(lambda r: next(slots))       # continuation first, still 16
+    assert [(r.req.rid, r.start) for r in rows] == [(0, 16)]
+    rows = s.plan(lambda r: next(slots))
+    assert [(r.req.rid, r.start) for r in rows] == [(0, 32)]
+    rows = s.plan(lambda r: next(slots))       # queue finally drains
+    assert [(r.req.rid, r.start) for r in rows] == [(1, 0)]
+    # a budget smaller than one row still schedules that row (progress)
+    t = _sched(prefill_chunk=16, max_prefill_tokens=1)
+    t.enqueue(_req(0, 5))
+    assert len(t.plan(lambda r: 0)) == 1
+
+
+def test_scheduler_admit_backpressure_preserves_fifo():
+    s = _sched(prefill_chunk=16)
+    s.enqueue(_req(0, 5))
+    s.enqueue(_req(1, 5))
+    assert s.plan(lambda r: None) == []        # nothing seatable
+    assert [r.rid for r in s.queue] == [0, 1]  # head did not rotate
+    rows = s.plan(lambda r: 3 if r.rid == 0 else None)
+    assert [r.req.rid for r in rows] == [0]    # head seated, next waits
+    assert [r.rid for r in s.queue] == [1]
+
+
+def test_scheduler_drop_slot_forgets_continuation():
+    s = _sched(prefill_chunk=16)
+    s.enqueue(_req(0, 40))
+    s.plan(lambda r: 2)
+    assert 2 in s.chunking
+    s.drop_slot(2)
+    assert s.chunking == {}
+
+
+# ---------------------------------------------------------------------------
+# Chunked / batched prefill bit-identity with the unchunked engine
+# ---------------------------------------------------------------------------
+def _mk_reqs(cfg, *, seed=7):
+    """Mixed lengths spanning single-shot and multi-chunk prompts, mixed
+    greedy/sampling so both decode variants and the per-request key
+    streams are on the hot path."""
+    rng = np.random.default_rng(seed)
+    kinds = [SamplingParams(greedy=True), SamplingParams(temperature=2.5),
+             SamplingParams(temperature=1.5, top_k=8), None]
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+                    max_new_tokens=5, sampling=kinds[i % len(kinds)])
+            for i, plen in enumerate([5, 40, 17, 33, 9, 24])]
+
+
+def _serve(cfg, params, reqs, **kw):
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-lite-16b"])
+@pytest.mark.parametrize("kv_impl", ["dense", "paged"])
+def test_chunked_prefill_bit_identical(arch, kv_impl):
+    """The acceptance bar for chunked prefill: identical token streams to
+    the unchunked engine for the same mixed-length mixed-sampling request
+    set — GQA (yi-9b) and MLA (deepseek MLA attention), dense and paged.
+    Paged runs also exercise multi-row batching (prefill_batch defaults
+    to slots when chunking a paged engine)."""
+    cfg = _cfg(arch)
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    _, base = _serve(cfg, params, _mk_reqs(cfg), kv_impl=kv_impl)
+    eng, chunked = _serve(cfg, params, _mk_reqs(cfg), kv_impl=kv_impl,
+                          prefill_chunk=16)
+    assert chunked == base
+    # chunking actually happened (prompts 40/17/33/24 span >1 chunk)
+    assert eng.scheduler.prefill_chunk == 16
+
+
+def test_chunked_prefill_batch_and_budget_variants():
+    """Scheduling knobs never change tokens: single-row chunking, forced
+    multi-row batching, and a tight token budget all reproduce the
+    unchunked stream on the paged plane."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    _, base = _serve(cfg, params, _mk_reqs(cfg), kv_impl="paged")
+    for kw in ({"prefill_chunk": 16, "prefill_batch": 1},
+               {"prefill_chunk": 16, "prefill_batch": 4},
+               {"prefill_chunk": 32, "max_prefill_tokens": 32}):
+        _, got = _serve(cfg, params, _mk_reqs(cfg), kv_impl="paged", **kw)
+        assert got == base, kw
+
+
+def test_chunked_dense_matches_manual_stream():
+    """Dense chunking holds the partial cache host-side until the final
+    chunk; the emitted stream still matches the batch=1 unchunked run."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(5))
+    prompt = np.random.default_rng(1).integers(0, cfg.vocab_size, 37)
+    reqs = lambda: [Request(rid=0, prompt=prompt,
+                            max_new_tokens=6)]          # noqa: E731
+    _, base = _serve(cfg, params, reqs(), kv_impl="dense")
+    _, got = _serve(cfg, params, reqs(), kv_impl="dense", prefill_chunk=16)
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# TTFT flatness: interleaving chunks with decode
+# ---------------------------------------------------------------------------
+def test_short_request_first_token_not_blocked_by_long_prefill():
+    """A short prompt submitted behind a 64-token (4-chunk) prompt gets
+    its first token on the very first iteration — admitted alongside the
+    long prompt's first chunk instead of queued behind its whole prefill —
+    and keeps decoding every iteration while the long prompt streams in."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    long = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 64),
+                   max_new_tokens=1)
+    short = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 4),
+                    max_new_tokens=8)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged",
+                      prefill_chunk=16)
+    eng.submit(long)
+    eng.submit(short)
+    eng.step()
+    assert len(short.out) >= 1                 # first token: iteration 1
+    assert 0 in eng.scheduler.chunking         # long prompt still mid-prefill
+    eng.step()
+    assert len(short.out) >= 2                 # decode interleaves chunks
+    assert 0 in eng.scheduler.chunking
+    eng.run()
+    assert long.done and short.done
+    assert len(long.out) == 1 and len(short.out) == 8
+
+
+def test_mid_prefill_slot_excluded_from_decode():
+    """A slot mid-chunking never emits decode tokens: its request's out
+    stays empty until the final chunk lands."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    req = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 48),
+                  max_new_tokens=4)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged",
+                      prefill_chunk=16)
+    eng.submit(req)
+    assert eng.step() > 0                      # chunk 0: prefill-only
+    assert req.out == [] and 0 in eng.scheduler.chunking
+    assert eng.step() > 0                      # chunk 1: still mid-prefill
+    assert req.out == []
+    # final chunk lands, then the slot joins that same iteration's decode
+    eng.step()
+    assert len(req.out) >= 1 and 0 not in eng.scheduler.chunking
+    eng.run()
+    assert len(req.out) == 4
+
+
+# ---------------------------------------------------------------------------
+# Compile bounds under chunking/batching
+# ---------------------------------------------------------------------------
+def test_chunked_compile_counts_bounded():
+    """Chunking keeps prefill compiles bounded by width variants (buckets
+    <= chunk, plus the chunk itself) x pow2 batch dims, and decode at 2 —
+    serving 7 distinct prompt lengths with mixed sampling never compiles
+    per-length."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, kv_impl="paged",
+                      prefill_chunk=16)
+    assert eng.buckets == (16, 32, 64)
+    rng = np.random.default_rng(0)
+    for i, plen in enumerate([3, 5, 9, 17, 25, 40, 64]):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen),
+                           max_new_tokens=3,
+                           sampling=(SamplingParams(temperature=2.0)
+                                     if i % 2 else None)))
+    done = eng.run()
+    assert len(done) == 7
+    counts = eng.compile_counts()
+    # every row is 16 wide (buckets <= chunk collapse onto the chunk
+    # width); batch dims are pow2 in [1, slots] -> at most 3 variants
+    assert counts["prefill"] <= 3, counts
+    assert counts["decode"] <= 2, counts
+
+
+def test_unchunked_defaults_keep_legacy_bound():
+    """With the knobs off the jit cache is bit-for-bit the legacy shape:
+    prefill <= len(buckets), decode <= 2."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, kv_impl="paged")
+    rng = np.random.default_rng(0)
+    for i, plen in enumerate([3, 17, 40]):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab_size, plen),
+                           max_new_tokens=3))
+    eng.run()
+    counts = eng.compile_counts()
+    assert counts["prefill"] <= len(eng.buckets)
+    assert counts["decode"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# submit() validation + queue regressions
+# ---------------------------------------------------------------------------
+def test_overlong_prompt_rejected_at_submit_not_step():
+    """An over-max_len prompt used to raise ValueError out of bucket_for
+    deep inside step(), killing the loop with other requests in flight;
+    it must be rejected at submit and the loop must keep serving."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged")
+    rng = np.random.default_rng(0)
+    ok = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 5),
+                 max_new_tokens=4)
+    too_long = Request(rid=1,
+                       prompt=rng.integers(0, cfg.vocab_size, 65),
+                       max_new_tokens=4)
+    eng.submit(ok)
+    eng.submit(too_long)
+    assert too_long.done and too_long.out == []
+    assert "max_len" in too_long.error
+    done = eng.run()
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert ok.error is None and len(ok.out) == 4
+
+
+def test_empty_prompt_rejected_at_submit():
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    bad = Request(rid=0, prompt=np.zeros(0, np.int32))
+    eng.submit(bad)
+    assert bad.done and "empty" in bad.error
+    assert eng.run() == [bad]
+
+
+def test_queue_is_deque_and_budget_clamped_once_at_submit():
+    """The admission-scan regression: the queue was a list popped at index
+    0 and every _admit re-clamped every queued budget (O(n^2) across a
+    burst). Now it is a deque and the clamp happens exactly once, at
+    submit — observable immediately, before any step."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    assert isinstance(eng._queue, deque)
+    req = Request(rid=0, prompt=np.zeros(40, np.int32) + 3,
+                  max_new_tokens=500)
+    eng.submit(req)
+    assert req.max_new_tokens == 64 - 40 + 1   # clamped at submit
+    assert len(eng._queue) == 1
+
+
+def test_lifecycle_timestamps_stamped_without_obs():
+    """Requests served by an obs-less engine still carry absolute
+    lifecycle timestamps (the attach-after-warmup path depends on
+    t_enqueue existing for requests submitted before attach_obs)."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    eng = ServeEngine(cfg, params, slots=1, max_len=64)
+    req = Request(rid=0, prompt=np.asarray([3, 5, 7], np.int32),
+                  max_new_tokens=3)
+    eng.submit(req)
+    assert req.t_enqueue > 0                   # stamped before any obs
+    eng.run()
+    assert 0 < req.t_enqueue <= req.t_admit <= req.t_first <= req.t_finish
+
+
+def test_chunking_requires_bucketed_arch():
+    """Recurrent archs prefill at exact length; asking for chunking is a
+    config error at engine construction, not a silent fallback."""
+    cfg = configs.get_smoke("xlstm-1.3b", act_impl="exact")
+    params = tf.init(cfg, jax.random.PRNGKey(2))
+    with pytest.raises(ValueError, match="bucketed"):
+        ServeEngine(cfg, params, slots=1, max_len=32, prefill_chunk=16)

@@ -383,17 +383,32 @@ def test_paged_pool_exhaustion_backpressure():
     assert eng.pager.stats().blocks_in_use == 0
 
 
-def test_paged_impossible_request_raises():
-    """A request larger than the whole pool must fail loudly instead of
-    spinning the serve loop forever."""
+def test_paged_impossible_request_rejected_at_submit():
+    """A request larger than the whole pool is rejected the moment it is
+    submitted (req.error set, done, no tokens) instead of head-of-line-
+    blocking the queue forever — and the engine keeps serving admissible
+    requests submitted around it."""
     cfg = _cfg()
     params = tf.init(cfg, jax.random.PRNGKey(1))
     eng = ServeEngine(cfg, params, slots=1, max_len=64, kv_impl="paged",
                       num_blocks=2)              # 1 allocatable block
-    eng.submit(Request(rid=0, prompt=np.arange(40, dtype=np.int32) % cfg.vocab_size,
-                       max_new_tokens=8))
-    with pytest.raises(RuntimeError, match="never be admitted"):
-        eng.run()
+    rng = np.random.default_rng(0)
+    ok_before = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 4),
+                        max_new_tokens=4)
+    too_big = Request(rid=1,
+                      prompt=np.arange(40, dtype=np.int32) % cfg.vocab_size,
+                      max_new_tokens=8)
+    ok_after = Request(rid=2, prompt=rng.integers(0, cfg.vocab_size, 4),
+                       max_new_tokens=4)
+    eng.submit(ok_before)
+    eng.submit(too_big)
+    eng.submit(ok_after)
+    assert too_big.done and too_big.error is not None
+    assert "KV blocks" in too_big.error and too_big.out == []
+    done = eng.run()                             # engine keeps serving
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    for r in (ok_before, ok_after):
+        assert r.done and r.error is None and len(r.out) == 4
 
 
 def test_completion_order_stable_under_mixed_max_new():
