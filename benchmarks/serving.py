@@ -556,6 +556,103 @@ def bench_saturation(cfg, params) -> dict:
     return {"profiles": audit, "clip_counters": clips}
 
 
+def _bench_sharded_inner(smoke: bool) -> dict:
+    """TP=1 vs TP=2 serve of the same fixed request trace. Must run in a
+    process with >= 2 visible devices (bench_sharded arranges that); the
+    gate downstream is token bit-identity + metrics-exist, NOT speedup —
+    forced host-CPU shards time-share the same cores, so tok_s_tp2 is a
+    topology record, not a performance claim."""
+    cfg = _cfg(smoke)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    max_new = 8 if smoke else 16
+
+    def one(tp: int):
+        eng = ServeEngine(cfg, params, slots=4, max_len=64, seed=0,
+                          kv_impl="paged", block_len=16, tp=tp)
+        _serve_once(eng, cfg, requests_per_slot=1, max_new=2)  # warm-up
+        reqs = _requests(cfg, 8, max_new)
+        for r in reqs[1::2]:  # greedy/sampled mix exercises both RNG paths
+            r.sampling = SamplingParams(temperature=0.7, top_k=6)
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        while eng.step():
+            pass
+        wall = time.perf_counter() - t0
+        toks = [list(map(int, r.out))
+                for r in sorted(reqs, key=lambda r: r.rid)]
+        n_tok = sum(len(t) for t in toks)
+        axis = (dict(eng.mesh.shape) if eng.mesh is not None
+                else {"data": jax.device_count(), "model": 1})
+        return toks, round(n_tok / wall, 2), axis
+
+    toks1, tok_s_tp1, _ = one(1)
+    toks2, tok_s_tp2, axis2 = one(2)
+    identical = int(toks1 == toks2)
+    print(f"[serving] sharded: tp=1 {tok_s_tp1} tok/s, tp=2 {tok_s_tp2} "
+          f"tok/s, tokens_identical={identical}")
+    return {
+        "device_count": jax.device_count(),
+        "tp": 2,
+        "axis_sizes": axis2,
+        "tok_s_tp1": tok_s_tp1,
+        "tok_s_tp2": tok_s_tp2,
+        "tokens_identical": identical,
+    }
+
+
+def bench_sharded(smoke: bool) -> dict:
+    """Tensor-parallel conformance section. jax freezes the device count
+    at first backend init, so when this process sees a single device the
+    measurement re-execs this file under
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 and parses the
+    child's marker line; with >= 2 devices it runs in-process."""
+    if jax.device_count() >= 2:
+        return _bench_sharded_inner(smoke)
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, os.path.abspath(__file__), "--sharded-subprocess"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=root)
+    for line in proc.stdout.splitlines():
+        if line.startswith(_SHARDED_MARKER):
+            return json.loads(line[len(_SHARDED_MARKER):])
+    return {"error": "sharded subprocess produced no result: "
+                     + (proc.stderr or proc.stdout)[-500:]}
+
+
+#: stdout marker the --sharded-subprocess child prints its JSON after
+_SHARDED_MARKER = "SHARDED_JSON:"
+
+
+def check_sharded(res: dict) -> list:
+    """Gate for the tensor-parallel section: the TP=2 engine must emit
+    bit-identical tokens to TP=1 and both throughput metrics must exist
+    and be finite. Deliberately NOT a speedup gate (see
+    _bench_sharded_inner)."""
+    nan = float("nan")
+    sh = res.get("sharded")
+    if not isinstance(sh, dict) or "error" in sh:
+        return [("sharded/<missing>", nan, nan)]
+    bad = []
+    if sh.get("tokens_identical") != 1:
+        bad.append(("sharded/tokens_identical",
+                    float(sh.get("tokens_identical", nan)), 1.0))
+    for key in ("tok_s_tp1", "tok_s_tp2"):
+        v = sh.get(key)
+        if not isinstance(v, (int, float)) or not np.isfinite(v) or v <= 0:
+            bad.append((f"sharded/{key}",
+                        float(v) if isinstance(v, (int, float)) else nan,
+                        0.0))
+    return bad
+
+
 def check_obs_sections(res: dict) -> list:
     """Presence/finiteness gate for the observability-driven sections —
     missing = failure, matching the tok/s gate's missing-metric rule.
@@ -617,6 +714,7 @@ def check_thresholds(res: dict) -> list:
     bad.extend(check_transient(res))
     bad.extend(check_obs_sections(res))
     bad.extend(check_mixed_chunked(res))
+    bad.extend(check_sharded(res))
     return bad
 
 
@@ -705,17 +803,32 @@ def main(argv=None) -> int:
     ap.add_argument("--evaluators", action="store_true",
                     help="also run the evaluator latency microbench "
                          "(always on in full mode; ~1M-element tensors)")
+    ap.add_argument("--sharded-subprocess", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: bench_sharded child
     args = ap.parse_args(argv)
+
+    if args.sharded_subprocess:
+        print(_SHARDED_MARKER + json.dumps(_bench_sharded_inner(args.smoke)))
+        return 0
 
     cfg = _cfg(args.smoke)
     params = tf.init(cfg, jax.random.PRNGKey(0))
     res = bench(cfg, params, args.smoke)
+    res["meta"] = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        # the throughput benches above run the unsharded engine: one data
+        # row per slot, no model-axis mesh
+        "tp": 1,
+        "axis_sizes": {"data": jax.device_count(), "model": 1},
+    }
     res["poisson"] = bench_poisson(cfg, params, args.smoke,
                                    trace_out=args.trace_out,
                                    metrics_json=args.metrics_json)
     res["mixed_chunked"] = bench_mixed_chunked(cfg, params, args.smoke)
     res["host_overhead_1slot"] = bench_host_overhead(cfg, params, args.smoke)
     res["saturation"] = bench_saturation(cfg, params)
+    res["sharded"] = bench_sharded(args.smoke)
     if args.evaluators or not args.smoke:
         rows: list = []
         run(rows, n=1 << 16 if args.smoke else 1_000_000,

@@ -23,6 +23,11 @@ still bit-identical. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
+``--tp N`` shards the engine tensor-parallel over the mesh's ``model``
+axis (params Megatron-style, the paged KV pool on its kv-heads dim); N
+must divide the visible device count — on CPU force devices first, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=2 ... --tp 2`` — and
+emitted tokens stay bit-identical to the unsharded engine.
 ``--metrics-json``/``--trace-out`` attach the repro.obs observability
 layer: TTFT/TPOT/e2e latency histograms with p50/p99 readout, queue and
 pool gauges, and a Chrome-trace (Perfetto-loadable) request-lifecycle
@@ -76,6 +81,10 @@ def main():
                          "(0 = auto)")
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="per-iteration prefill token budget (0 = unlimited)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel degree over the mesh 'model' "
+                         "axis (must divide the visible device count; "
+                         "bit-identical tokens). 0/1 = unsharded")
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine metrics snapshot (TTFT/TPOT "
                          "histograms, queue/pool gauges, counters) here")
@@ -106,7 +115,11 @@ def main():
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,
+                      tp=args.tp or None,
                       obs=obs)
+    if eng.mesh is not None:
+        print(f"[serve_lm] mesh: {dict(eng.mesh.shape)} over "
+              f"{eng.mesh.size} devices (tokens bit-identical to --tp 1)")
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):

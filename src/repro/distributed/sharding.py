@@ -21,6 +21,8 @@ sharded over the data axis instead (sequence parallelism).
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Any, Optional, Tuple
 
 import jax
@@ -98,3 +100,91 @@ def cache_spec(mesh: Mesh, batch: int, seq_len: int, kv_heads: int) -> dict:
     if batch % dp == 0 and batch >= dp:
         return {"batch_axis": tuple(dp_axes), "seq_axis": None, "kv_axis": kh}
     return {"batch_axis": None, "seq_axis": tuple(dp_axes), "kv_axis": kh}
+
+
+# ---------------------------------------------------------------------------
+# Ambient serving mesh
+#
+# Model code (models/attention.py, models/transformer.py) is traced from
+# inside ServeEngine's jits and must not take a mesh argument — the cfg
+# dataclass is hashed into jit cache keys and a Mesh is not a config. The
+# engine instead *enters* `serving_mesh(mesh)` around every trace/dispatch,
+# and the model reads `active_serving_mesh()` at trace time to decide
+# whether to emit sharding constraints / shard_map attention. Thread-local
+# so concurrent engines on different meshes can't cross-talk.
+# ---------------------------------------------------------------------------
+
+_SERVING_MESH = threading.local()
+
+
+def active_serving_mesh() -> Optional[Mesh]:
+    """The mesh entered by the innermost `serving_mesh(...)`, or None."""
+    return getattr(_SERVING_MESH, "mesh", None)
+
+
+@contextlib.contextmanager
+def serving_mesh(mesh: Optional[Mesh]):
+    """Make `mesh` visible to model code traced inside this block."""
+    prev = getattr(_SERVING_MESH, "mesh", None)
+    _SERVING_MESH.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _SERVING_MESH.mesh = prev
+
+
+def serve_param_shardings(cfg, params, mesh: Mesh):
+    """NamedSharding tree for serving params on a ("data","model") mesh.
+
+    The Megatron-style cut via DEFAULT_RULES (wq/wk/wv head-parallel,
+    FFN column/row-parallel, untied lm_head vocab-parallel — the vocab
+    cut is what makes the single logits all-gather the *only* gather in
+    a decode step), with one serving-specific override: the embedding
+    table is forced replicated. `jnp.take(table, tokens)` on a
+    vocab-sharded table would lower to a collective inside the datapath;
+    a replicated table keeps the embed lookup shard-local and costs only
+    vocab*d_model bytes per device. Tied-embeddings models therefore
+    replicate the head too (documented carve-out: zero all-gathers —
+    logits are computed replicated from replicated weights).
+    """
+    from repro.models import common as cm
+    from repro.models import transformer as _tf
+
+    axes = cm.param_axes(_tf.model_spec(cfg))
+    sh = tree_shardings(axes, params, mesh)
+    repl = NamedSharding(mesh, PS())
+    if "embed" in sh:
+        sh["embed"] = jax.tree.map(lambda _: repl, sh["embed"])
+    return sh
+
+
+#: cache-tree leaf names whose dim -2 is the kv-head axis (dense stacked
+#: (slots,1,S,KH,hd), per-slot (1,S,KH,hd), and paged pools (N,L,KH,hd) —
+#: with or without a leading stacked-layer axis, -2 is always KH).
+_KV_HEAD_LEAVES = ("k", "v", "k_pool", "v_pool")
+
+
+def kv_cache_shardings(cache, mesh: Mesh, rules=DEFAULT_RULES):
+    """NamedSharding tree for a serve cache (dense or paged), same structure.
+
+    k/v buffers and paged k/v pools shard their head axis (dim -2) over
+    the model axis via the "kv_heads" rule — divisibility fallback to
+    replicated comes for free from spec_for_axes. Everything else (block
+    tables, lens, cur_idx, MLA latent `c_kv_pool`/`k_rope_pool`,
+    recurrent state) is replicated: tables/lens are scalar-prefetched
+    host metadata, and the MLA latent is per-slot-small + needed whole
+    by every head shard.
+    """
+    repl = NamedSharding(mesh, PS())
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _KV_HEAD_LEAVES and getattr(leaf, "ndim", 0) >= 2:
+            axes = [None] * leaf.ndim
+            axes[-2] = "kv_heads"
+            return NamedSharding(
+                mesh, spec_for_axes(tuple(axes), tuple(leaf.shape), mesh,
+                                    rules))
+        return repl
+
+    return jax.tree_util.tree_map_with_path(one, cache)

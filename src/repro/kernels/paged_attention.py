@@ -388,6 +388,70 @@ def mla_decode(q_eff, q_rope, c_pool, r_pool, tables, k_len, *, scale: float,
 
 
 # ---------------------------------------------------------------------------
+# Shard-local execution over a ("data","model") mesh
+#
+# pallas_call is opaque to the GSPMD partitioner — XLA cannot slice a
+# kernel's grid or its scalar-prefetched block tables, so running these
+# kernels on a sharded cache means wrapping them in shard_map over the
+# model axis: each shard runs the SAME grid (slots x passes x table
+# chunks) against its OWN head slice of the pools, with the block tables
+# and lengths replicated (they are head-invariant host metadata — the
+# whole point of KVPager staying shard-agnostic). The per-shard kernel is
+# bitwise the single-device kernel on a narrower head axis, and head
+# slices never interact inside attention, so no collective appears inside
+# the wrapped region (check_rep=False: outputs are head-sharded, not
+# replicated).
+# ---------------------------------------------------------------------------
+def shard_local_gqa(attend_fn, mesh, q, k_pool, v_pool, tables, k_len):
+    """Run a GQA paged-attend callable shard-locally over mesh axis "model".
+
+    attend_fn: kernels.ops.paged_attend_gqa with kwargs bound (scale /
+    softmax_impl / kv_dtype); q (B,KH,G,hd) and the pools (N,L,KH,hd)
+    arrive KH-sharded, tables/k_len replicated; output is KH-sharded.
+    Caller guarantees KH % mesh.shape["model"] == 0.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    return shard_map(
+        attend_fn, mesh=mesh,
+        in_specs=(PS(None, "model", None, None),      # q (B, KH, G, hd)
+                  PS(None, None, "model", None),      # k_pool (N, L, KH, hd)
+                  PS(None, None, "model", None),      # v_pool
+                  PS(None, None),                     # tables (B, M)
+                  PS(None)),                          # k_len (B,)
+        out_specs=PS(None, "model", None, None),
+        check_rep=False,
+    )(q, k_pool, v_pool, tables, k_len)
+
+
+def shard_local_mla(attend_fn, mesh, q_eff, q_rope, c_pool, r_pool, tables,
+                    k_len):
+    """Run an MLA paged-attend callable shard-locally over mesh axis
+    "model".
+
+    MLA's latent/rope pools carry no head axis — they are replicated and
+    each shard walks the full latent with its own H slice of q_eff/q_rope
+    (head-parallel over the absorbed queries). Output (B,H,R) is
+    H-sharded. Caller guarantees H % mesh.shape["model"] == 0.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    return shard_map(
+        attend_fn, mesh=mesh,
+        in_specs=(PS(None, "model", None),            # q_eff (B, H, R)
+                  PS(None, "model", None),            # q_rope (B, H, P)
+                  PS(None, None, None),               # c_pool (N, L, R)
+                  PS(None, None, None),               # r_pool (N, L, P)
+                  PS(None, None),                     # tables (B, M)
+                  PS(None)),                          # k_len (B,)
+        out_specs=PS(None, "model", None),
+        check_rep=False,
+    )(q_eff, q_rope, c_pool, r_pool, tables, k_len)
+
+
+# ---------------------------------------------------------------------------
 # Transient working-set accounting (the metric benchmarks/serving.py gates)
 # ---------------------------------------------------------------------------
 def _dtype_bytes(dtype) -> int:

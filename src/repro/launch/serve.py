@@ -60,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="per-iteration prefill token budget across "
                          "scheduled rows (0 = unlimited)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel degree: shard params + KV over "
+                         "the mesh 'model' axis (must divide the visible "
+                         "device count; force CPU devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Tokens are bit-identical to --tp 1. 0/1 = "
+                         "unsharded single-device engine")
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine's metrics-registry snapshot "
                          "(TTFT/TPOT/e2e histograms, queue depth, pool "
@@ -79,7 +86,8 @@ def main(argv=None):
         import dataclasses
 
         cfg = dataclasses.replace(cfg, input_mode="tokens")
-    print(f"[serve] arch={cfg.name} slots={args.slots} kv={args.kv_impl}")
+    print(f"[serve] arch={cfg.name} slots={args.slots} kv={args.kv_impl} "
+          f"tp={args.tp or 1}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
     # temperature <= 0 resolves to greedy inside SamplingParams
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
@@ -91,7 +99,11 @@ def main(argv=None):
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,
+                      tp=args.tp or None,
                       obs=obs)
+    if eng.mesh is not None:
+        print(f"[serve] mesh: {dict(eng.mesh.shape)} over "
+              f"{eng.mesh.size} devices")
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

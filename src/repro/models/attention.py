@@ -13,12 +13,14 @@ cache stays compressed (the whole point of MLA).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models import common as cm
 from repro.models.common import P
 
@@ -315,11 +317,22 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
     if S == 1 and _paged_attend_impl(cfg) == "pallas":
         # Block-walking decode kernel: never materializes the table gather.
         from repro.kernels import ops as kops  # lazy: kernels optional
+        from repro.kernels import paged_attention as PA
 
-        o = kops.paged_attend_gqa(
-            qg[:, 0], kp, vp, tables, lens + 1, scale=1.0 / np.sqrt(hd),
+        attend = functools.partial(
+            kops.paged_attend_gqa, scale=1.0 / np.sqrt(hd),
             softmax_impl=getattr(cfg, "softmax_impl", "exact"),
-            kv_dtype=x.dtype)[:, None]                  # (B,1,KH,G,hd) f32
+            kv_dtype=x.dtype)
+        mesh = shd.active_serving_mesh()
+        if mesh is not None:
+            # pallas_call is opaque to GSPMD — run the kernel shard-local
+            # over the model axis: per-shard KH slice of q and the pools,
+            # tables/lens replicated, no collective inside attention.
+            # ServeEngine init guarantees KH % tp == 0 on this path.
+            o = PA.shard_local_gqa(attend, mesh, qg[:, 0], kp, vp,
+                                   tables, lens + 1)[:, None]
+        else:
+            o = attend(qg[:, 0], kp, vp, tables, lens + 1)[:, None]
     else:
         k_full = _pool_gather(kp, tables).astype(x.dtype)
         v_full = _pool_gather(vp, tables).astype(x.dtype)
@@ -524,12 +537,24 @@ def _mla_paged_apply(params, x, cfg, cache):
             # Block-walking absorbed decode: the kernel accumulates the
             # latent output; wv_b projection mirrors _mla_absorbed_decode.
             from repro.kernels import ops as kops  # lazy: kernels optional
+            from repro.kernels import paged_attention as PA
 
             q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk_b)
-            o_lat = kops.paged_attend_mla(
-                q_eff[:, 0], q_rope[:, 0], cp, rp, tables, lens + 1,
-                scale=scale,
+            attend = functools.partial(
+                kops.paged_attend_mla, scale=scale,
                 softmax_impl=getattr(cfg, "softmax_impl", "exact"))
+            mesh = shd.active_serving_mesh()
+            if mesh is not None:
+                # Shard-local over the model axis: per-shard H slice of
+                # the absorbed queries against the replicated latent/rope
+                # pools (they carry no head axis). Engine init guarantees
+                # H % tp == 0 on this path.
+                o_lat = PA.shard_local_mla(attend, mesh, q_eff[:, 0],
+                                           q_rope[:, 0], cp, rp, tables,
+                                           lens + 1)
+            else:
+                o_lat = attend(q_eff[:, 0], q_rope[:, 0], cp, rp, tables,
+                               lens + 1)
             o = jnp.einsum("bshl,lhv->bshv", o_lat[:, None],
                            wv_b.astype(jnp.float32))
         else:

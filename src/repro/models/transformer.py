@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import sharding as shd
 from repro.models import attention as attn
 from repro.models import common as cm
 from repro.models import mlp as mlpm
@@ -577,6 +578,17 @@ def apply(params, batch: Dict[str, jax.Array], cfg, cache=None):
     x = cm.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = cm.unembed(head, x.astype(jnp.float32))
+    mesh = shd.active_serving_mesh()
+    if mesh is not None:
+        # The one serving collective: an untied lm_head is vocab-sharded
+        # (serve_param_shardings), so the unembed produces vocab-sharded
+        # logits; pinning them replicated here forces exactly one
+        # all-gather per step, at the logits/vocab boundary, and keeps the
+        # sampling tail shard-local + bit-identical to single-device
+        # (every shard sees the same concatenated logit row). Tied heads
+        # are replicated, so this is a no-op there.
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
     return logits, aux_total, new_cache
 
 

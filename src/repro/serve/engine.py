@@ -118,6 +118,12 @@ or off (CI-enforced in tests/test_obs.py). Metrics emitted:
                                                            (device->host)
     engine.phase.sample_copy_ms       histogram  ms        step() span (host
                                                            bookkeeping)
+    engine.phase.collective_ms        histogram  ms        step() span (tp>1
+                                                           only: the logits
+                                                           all-gather +
+                                                           sampling tail)
+    engine.mesh.tp                    gauge      shards    init (constant)
+    engine.mesh.devices               gauge      devices   init (constant)
     engine.compiles.prefill/.decode   counter    compiles  compile_counts()
                                                            delta per step
     kv.pool.blocks_in_use             gauge      blocks    KVPager alloc/free
@@ -127,6 +133,40 @@ or off (CI-enforced in tests/test_obs.py). Metrics emitted:
     kv.pool.blocks_freed              counter    blocks    KVPager.free
     fixed_point.saturation.clips{fmt=Q2.14}  counter  elements  eager
         quantize under obs.observe_saturation (plus .elements{...} totals)
+
+Sharding contract (``tp=N`` / ``mesh=``): the engine runs SPMD on a
+("data","model") mesh (launch.mesh.make_host_mesh). Decode is still ONE
+jitted dispatch per step; the GSPMD partitioner splits it across shards.
+Emitted tokens are bit-identical per shard count (TP=1 == TP=2 == TP=4;
+greedy + seeded sampling, GQA + MLA, dense/paged/pallas, chunked +
+unchunked — tests/test_sharded_serving.py), and the collective schedule
+is exactly one all-gather per decode step, at the logits, with none
+inside the attention datapath (the HLO-cost lane asserts this):
+
+    leaf / tensor                 PartitionSpec          why
+    ----------------------------  ---------------------  -------------------
+    wq / wk / wv / wo             heads on "model"       Megatron column/row
+    mlp w_in / w_gate / w_out     d_ff on "model"        Megatron column/row
+    embed table                   replicated (forced)    jnp.take must stay
+                                                         shard-local
+    lm_head table (untied)        vocab on "model"       -> the ONE logits
+                                                         all-gather/step
+    dense cache k / v             KH axis on "model"     head-parallel GQA
+    paged k_pool / v_pool         (N,L,KH/tp,hd)/shard   head-parallel GQA
+    MLA c_kv_pool / k_rope_pool   replicated             latent is head-less
+    block tables / lens / idx     replicated             host metadata; the
+                                                         KVPager stays
+                                                         shard-agnostic
+    tokens/rids/steps/temps/...   replicated             tiny host state
+    logits                        replicated (pinned in  sampling tail runs
+                                  transformer.apply)     shard-local, bit-
+                                                         identical per tp
+
+Tied-embeddings models replicate the head too (carve-out: zero
+all-gathers). The paged-attention Pallas kernel runs under shard_map
+(kernels.paged_attention.shard_local_*) — per-shard head slices against
+replicated tables, grid unchanged — since pallas_call is opaque to the
+partitioner; engine init enforces head % tp == 0 on that path.
 """
 from __future__ import annotations
 
@@ -139,6 +179,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as obs_lib
+from repro.distributed import sharding as shd
 from repro.models import transformer as tf
 from repro.serve import kv_pager as kvp
 from repro.serve import sampling as sp
@@ -387,7 +428,9 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_batch: Optional[int] = None,
                  max_prefill_tokens: Optional[int] = None,
-                 obs: Optional[obs_lib.Observability] = None):
+                 obs: Optional[obs_lib.Observability] = None,
+                 tp: Optional[int] = None,
+                 mesh: Optional[Any] = None):
         assert cfg.input_mode == "tokens", "engine serves token LMs"
         self.obs = obs if obs is not None else obs_lib.NULL
         if softmax_impl is not None:
@@ -424,6 +467,37 @@ class ServeEngine:
             raise ValueError(
                 "paged_attend_impl='pallas' supports score_dtype='f32' "
                 f"only (got {cfg.score_dtype!r})")
+        # -- tensor-parallel mesh (tentpole refactor; see docstring table) --
+        # tp=N resolves to a ("data","model") host mesh with an N-wide
+        # model axis; mesh=None/tp=1 is the legacy single-device path
+        # byte-for-byte (mesh_or_none never builds a trivial mesh).
+        if mesh is None and tp is not None:
+            from repro.launch import mesh as mesh_lib
+
+            mesh = mesh_lib.mesh_or_none(tp)
+        self.mesh = mesh
+        self.tp = int(mesh.shape["model"]) if mesh is not None else 1
+        if mesh is not None and self.paged_attend_impl == "pallas":
+            # The block-walking kernel runs under shard_map with a strict
+            # head-axis split (pallas_call is opaque to GSPMD, so there is
+            # no replicated fallback on this path — the gather/dense paths
+            # fall back via spec_for_axes divisibility instead).
+            from repro.models.attention import _padded_heads
+
+            if getattr(cfg, "mla", None) is not None:
+                n_heads, axis = cfg.num_heads, "num_heads"
+            else:
+                n_heads, axis = _padded_heads(cfg)[1], "kv heads (padded)"
+            if n_heads % self.tp:
+                raise ValueError(
+                    f"paged_attend_impl='pallas' shards attention heads "
+                    f"over the model axis: {axis}={n_heads} is not "
+                    f"divisible by tp={self.tp}")
+        if mesh is not None:
+            self._param_sh = shd.serve_param_shardings(cfg, self.params, mesh)
+            self.params = jax.device_put(self.params, self._param_sh)
+            self._repl = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
         self.buckets = kvp.bucket_lengths(max_len, self.block_len)
         # Bucket-pad prefills only for attention-cache families: causal
         # attention makes the pad tail invisible to the last real position,
@@ -481,26 +555,95 @@ class ServeEngine:
             self._caches = tf.init_paged_cache(
                 cfg, slots, num_blocks, self.block_len, self.max_blocks,
                 jnp.float32)
-            self._prefill = jax.jit(make_paged_prefill_step(cfg),
-                                    donate_argnums=(1,))
-            sample_fn = jax.jit(make_paged_decode_step(cfg))
-            greedy_fn = jax.jit(
-                make_paged_decode_step(cfg, greedy_only=True))
-            self._clear_slot = jax.jit(
-                lambda caches, slot: tf.paged_set_slot(
+
+            def _clear_fn(caches, slot):
+                return tf.paged_set_slot(
                     cfg, caches, slot,
                     jnp.zeros((self.max_blocks,), jnp.int32),
-                    jnp.zeros((), jnp.int32)),
-                donate_argnums=(0,))
+                    jnp.zeros((), jnp.int32))
+
+            if self.mesh is not None:
+                # head-sharded pools, everything else (tables/lens/latent)
+                # replicated; explicit in/out shardings on every jit so
+                # decode stays ONE dispatch and cache state round-trips
+                # without resharding (donation stays in place)
+                self._cache_sh = shd.kv_cache_shardings(self._caches,
+                                                        self.mesh)
+                self._caches = jax.device_put(self._caches, self._cache_sh)
+                repl = self._repl
+                self._prefill = jax.jit(
+                    make_paged_prefill_step(cfg), donate_argnums=(1,),
+                    in_shardings=(self._param_sh, self._cache_sh)
+                    + (repl,) * 8,
+                    out_shardings=(repl, self._cache_sh))
+                decode_sh = dict(
+                    in_shardings=(self._param_sh, self._cache_sh)
+                    + (repl,) * 7,
+                    out_shardings=(repl, self._cache_sh))
+                sample_fn = jax.jit(make_paged_decode_step(cfg), **decode_sh)
+                greedy_fn = jax.jit(
+                    make_paged_decode_step(cfg, greedy_only=True),
+                    **decode_sh)
+                self._clear_slot = jax.jit(
+                    _clear_fn, donate_argnums=(0,),
+                    in_shardings=(self._cache_sh, repl),
+                    out_shardings=self._cache_sh)
+            else:
+                self._prefill = jax.jit(make_paged_prefill_step(cfg),
+                                        donate_argnums=(1,))
+                sample_fn = jax.jit(make_paged_decode_step(cfg))
+                greedy_fn = jax.jit(
+                    make_paged_decode_step(cfg, greedy_only=True))
+                self._clear_slot = jax.jit(_clear_fn, donate_argnums=(0,))
         else:
             self.pager = None
             self._caches = tf.stack_caches(
                 [tf.init_cache(cfg, 1, max_len, jnp.float32)
                  for _ in range(slots)])
-            self._prefill = jax.jit(make_bucketed_prefill_step(cfg))
-            sample_fn = jax.jit(make_batched_decode_step(cfg))
-            greedy_fn = jax.jit(
-                make_batched_decode_step(cfg, greedy_only=True))
+            if self.mesh is not None:
+                self._cache_sh = shd.kv_cache_shardings(self._caches,
+                                                        self.mesh)
+                self._caches = jax.device_put(self._caches, self._cache_sh)
+                # batch-1 per-request cache template (prefill in/out +
+                # insert_slot's second arg): same KH-sharded leaves
+                p1 = jax.eval_shape(
+                    lambda: tf.init_cache(cfg, 1, max_len, jnp.float32))
+                self._p1_sh = shd.kv_cache_shardings(p1, self.mesh)
+                repl = self._repl
+                self._prefill = jax.jit(
+                    make_bucketed_prefill_step(cfg),
+                    in_shardings=(self._param_sh, self._p1_sh, repl, repl,
+                                  repl),
+                    out_shardings=(repl, self._p1_sh))
+                decode_sh = dict(
+                    in_shardings=(self._param_sh, self._cache_sh)
+                    + (repl,) * 7,
+                    out_shardings=(repl, self._cache_sh))
+                sample_fn = jax.jit(make_batched_decode_step(cfg),
+                                    **decode_sh)
+                greedy_fn = jax.jit(
+                    make_batched_decode_step(cfg, greedy_only=True),
+                    **decode_sh)
+
+                def _insert_fn(stacked, cache, slot):
+                    return jax.tree.map(
+                        lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                            full, one.astype(full.dtype), slot, 0),
+                        stacked, cache)
+
+                # engine-owned mesh-aware insert (tf.insert_slot's module-
+                # level jit carries no shardings; an explicit one keeps the
+                # donated stacked tree's sharding stable across admissions)
+                self._insert_jit = jax.jit(
+                    _insert_fn, donate_argnums=(0,),
+                    in_shardings=(self._cache_sh, self._p1_sh, repl),
+                    out_shardings=self._cache_sh)
+            else:
+                self._prefill = jax.jit(make_bucketed_prefill_step(cfg))
+                sample_fn = jax.jit(make_batched_decode_step(cfg))
+                greedy_fn = jax.jit(
+                    make_batched_decode_step(cfg, greedy_only=True))
+                self._insert_jit = None
 
         def _dispatch(params, caches, tokens, rids, steps, temps, top_ks,
                       greedy, base_key):
@@ -513,7 +656,12 @@ class ServeEngine:
         self._decode = _dispatch
         self._decode_jits = (greedy_fn, sample_fn)
         self._sample = jax.jit(sp.sample_batched)
-        self._score = jax.jit(make_score_step(cfg))
+        if self.mesh is not None:
+            self._score = jax.jit(make_score_step(cfg),
+                                  in_shardings=(self._param_sh, self._repl),
+                                  out_shardings=self._repl)
+        else:
+            self._score = jax.jit(make_score_step(cfg))
         self._done: List[Request] = []
         self._active: List[Optional[Request]] = [None] * slots
         # per-slot full block-table rows (paged; built at admission, reused
@@ -550,6 +698,12 @@ class ServeEngine:
         self._m_steps = m.counter("engine.steps", unit="steps")
         self._m_queue = m.gauge("engine.queue_depth", unit="requests")
         self._m_occ = m.gauge("engine.batch_occupancy", unit="slots")
+        # mesh topology gauges: constant per engine lifetime, set once so
+        # every metrics snapshot records what topology produced it
+        self._m_mesh_tp = m.gauge("engine.mesh.tp", unit="shards")
+        self._m_mesh_dev = m.gauge("engine.mesh.devices", unit="devices")
+        self._m_mesh_tp.set(self.tp)
+        self._m_mesh_dev.set(self.mesh.size if self.mesh is not None else 1)
         self._m_ttft = m.histogram("engine.ttft_ms", unit="ms")
         self._m_tpot = m.histogram("engine.tpot_ms", unit="ms")
         self._m_e2e = m.histogram("engine.e2e_ms", unit="ms")
@@ -668,7 +822,9 @@ class ServeEngine:
         """(S,) int32 prompt -> (S-1,) per-token log-probs (teacher-forced),
         through the cfg.loss_impl-selected log-softmax datapath."""
         toks = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
-        return np.asarray(self._score(self.params, {"tokens": toks})[0])
+        with shd.serving_mesh(self.mesh):
+            out = self._score(self.params, {"tokens": toks})
+        return np.asarray(out[0])
 
     @property
     def active_mask(self) -> np.ndarray:
@@ -878,7 +1034,11 @@ class ServeEngine:
             self.params, cache, {"tokens": jnp.asarray(toks)},
             jnp.asarray(pin, jnp.int32), jnp.asarray(li, jnp.int32))
         if row.final:
-            self._caches = tf.insert_slot(self._caches, cache, s)
+            if self._insert_jit is not None:
+                self._caches = self._insert_jit(self._caches, cache,
+                                                jnp.asarray(s, jnp.int32))
+            else:
+                self._caches = tf.insert_slot(self._caches, cache, s)
             self._complete_prefill(req, s, logits)
         else:
             self._pending[s] = cache
@@ -914,10 +1074,19 @@ class ServeEngine:
         slots are re-prefilled at insert, paged slots' garbage writes land
         in scratch or in positions a later chunk/decode write overwrites
         before the length mask exposes them), so the dispatch count and
-        the compiled shape never depend on occupancy. An iteration whose
-        only work is prefill (e.g. a long prompt still chunking, nothing
-        decodable yet) skips the decode dispatch entirely.
+        the compiled shape never depend on occupancy — and regardless of
+        tp: a sharded engine still issues ONE dispatch, the partitioner
+        runs it SPMD across the mesh. An iteration whose only work is
+        prefill (e.g. a long prompt still chunking, nothing decodable
+        yet) skips the decode dispatch entirely.
         """
+        # every trace this iteration performs (prefill/decode/clear/insert)
+        # sees the engine's mesh (or None) via the ambient context — model
+        # code reads it to place the logits constraint / shard_map attention
+        with shd.serving_mesh(self.mesh):
+            return self._step_impl()
+
+    def _step_impl(self) -> int:
         ob = self.obs
         t_step = time.perf_counter()
         self._m_steps.inc()
@@ -959,8 +1128,19 @@ class ServeEngine:
                 jnp.asarray(self._rids), jnp.asarray(self._steps),
                 jnp.asarray(self._temps), jnp.asarray(self._top_ks),
                 jnp.asarray(self._greedy), self._base_key)
-        with ob.phase("host_sync"):
-            nxt = np.asarray(nxt)
+        if self.mesh is None:
+            with ob.phase("host_sync"):
+                nxt = np.asarray(nxt)
+        else:
+            # split the device wait: host_sync blocks on the cache state
+            # (the per-shard attention datapath), collective covers the
+            # remaining tail — the logits all-gather + sampling — so the
+            # one serving collective's cost shows up in the phase
+            # breakdown and the Chrome trace
+            with ob.phase("host_sync"):
+                jax.block_until_ready(self._caches)
+            with ob.phase("collective"):
+                nxt = np.asarray(nxt)
         with ob.phase("sample_copy"):
             for s in decodable:
                 req = self._active[s]

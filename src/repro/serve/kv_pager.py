@@ -25,6 +25,16 @@ the host side of that scheme:
     with causal attention the logits at the last *real* position never see
     the pad tail, and pad K/V land past the slot length mask (and are
     overwritten by decode writes).
+
+Sharding: this module is deliberately *shard-agnostic*. Under the
+tensor-parallel engine (``ServeEngine(tp=N)``) the pool's device leaves
+are sharded over the mesh ``model`` axis on their kv-heads dimension, so
+every shard holds ``(num_blocks, block_len, KH/N, dim)`` — the *same*
+``num_blocks`` per shard, a head-slice of every block rather than a
+block-slice of the pool. There is therefore exactly one logical block id
+space: the allocator's free list and the per-slot block tables (which
+stay replicated on device) are valid verbatim on every shard, and the
+pager never needs to know the mesh exists.
 """
 from __future__ import annotations
 
