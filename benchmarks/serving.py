@@ -64,6 +64,25 @@ benchmarks/latency.py evaluator microbench lives here too, see run()):
     prefill). The speedup is a ratio of two runs on the same host in the
     same process, so it holds on any runner class.
 
+``prefix_cache``
+    The prefix-caching acceptance trace: a synthetic "N users, 5 system
+    prompts" open-loop Poisson workload (every prompt = one of five
+    112-token system prompts + a short unique user tail, greedy and
+    seeded sampling mixed), served cache-off and cache-on
+    (``prefix_cache=True``) on the paged engine. Gated on all three
+    axes of ROADMAP item 2's contract: the two runs' token streams must
+    be bit-identical, and both the prefill-token count and the pool
+    peak-block occupancy must collapse by >= MIN_PREFIX_COLLAPSE (the
+    point of the radix cache: the shared system prompt prefills once
+    and its blocks are shared, not recomputed and duplicated, per
+    user). Both runs first serve one priming request per system prompt
+    to completion — production system prompts are long-lived, so the
+    steady state measured is the warm-cache one; the priming tokens
+    join the identity check. A TP=1-vs-TP=2 sub-trace (subprocess re-exec, like
+    ``sharded``) additionally gates that cache-on tokens stay
+    bit-identical under tensor parallelism — block sharing is
+    host-side metadata, so the mesh must not see it.
+
 ``host_overhead_1slot``
     The per-step phase breakdown (admit / dispatch / host_sync /
     sample_copy mean ms) per impl at 1 slot — quantifying the carried
@@ -155,6 +174,12 @@ MIN_SPEEDUP_8_OVER_1 = 1.5
 #: kernel's scaling reflects interpreter overhead (grid size grows with
 #: slots), so its gates are the tok/s floor + the transient invariance.
 SPEEDUP_IMPLS = ("dense", "paged")
+#: prefix-cache gate: prefill tokens computed AND pool peak-blocks must
+#: each drop by at least this factor cache-on vs cache-off on the
+#: shared-system-prompt trace. A RATIO of two runs in one process, so it
+#: holds on any runner class; the observed smoke collapse is ~7x
+#: (prefill tokens) and ~2.5x (peak blocks).
+MIN_PREFIX_COLLAPSE = 2.0
 
 
 def _cfg(smoke: bool) -> ModelConfig:
@@ -653,6 +678,198 @@ def check_sharded(res: dict) -> list:
     return bad
 
 
+def _prefix_trace(cfg, n_users: int, rate_req_s: float, seed: int = 21):
+    """The "N users, 5 system prompts" workload: every prompt is one of
+    five fixed 112-token (7-block) system prompts plus a 1..15-token
+    unique user tail, arriving open-loop Poisson; every other request
+    samples (seeded) instead of decoding greedily. Deterministic: both
+    engine runs serve identical requests at identical offsets."""
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, cfg.vocab_size, 112).astype(np.int32)
+                   for _ in range(5)]
+    assign = rng.integers(0, 5, n_users)
+    tails = rng.integers(1, 16, n_users)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_req_s, n_users))
+
+    def reqs():
+        r = np.random.default_rng(seed + 1)
+        out = []
+        for i in range(n_users):
+            tail = r.integers(0, cfg.vocab_size,
+                              int(tails[i])).astype(np.int32)
+            out.append(Request(
+                rid=i,
+                prompt=np.concatenate([sys_prompts[int(assign[i])], tail]),
+                max_new_tokens=2,
+                sampling=(SamplingParams(temperature=0.7, top_k=6)
+                          if i % 2 else None)))
+        return out
+
+    def prime():
+        # one warm-up request per system prompt, served to completion
+        # before the flood: production system prompts are long-lived, so
+        # the steady state being measured is the warm-cache one. Both
+        # engine runs serve them (identical work; the cache-off engine
+        # just recomputes), and their tokens join the identity check.
+        return [Request(rid=1_000_000 + j, prompt=sys_prompts[j],
+                        max_new_tokens=2) for j in range(len(sys_prompts))]
+
+    return arrivals, reqs, prime
+
+
+def _serve_prefix(cfg, params, reqs, arrivals, *, prefix: bool,
+                  tp=None, prime=None) -> tuple:
+    """Priming pass (serve ``prime`` to completion — seeds the radix
+    index when the cache is on) followed by one open-loop replay, with an
+    attached metrics registry. Returns (section dict, sorted token
+    streams incl. priming). Compile walls land in wall_s — recorded, not
+    gated — keeping prefill-token and peak-block counts pure measures of
+    the trace."""
+    obs = obs_lib.Observability()
+    eng = ServeEngine(cfg, params, slots=16, max_len=128, seed=0,
+                      kv_impl="paged", block_len=16, prefix_cache=prefix,
+                      tp=tp, obs=obs)
+    prime = list(prime() if callable(prime) else prime or [])
+    for r in prime:
+        eng.submit(r)
+    eng.run()
+    wall = _drive_open_loop(eng, reqs, arrivals)
+    st = eng.pager.stats()
+    m = obs.metrics
+    sec = {
+        "wall_s": round(wall, 3),
+        "prefill_tokens": int(m.get("engine.prefill.tokens").value),
+        "prefix_hit_tokens": int(m.get("prefix.hit_tokens").value),
+        "blocks_saved": int(m.get("kv.pool.blocks_saved").value),
+        "pool_peak_blocks": int(st.peak_in_use),
+        "pool_num_blocks": int(st.num_blocks),
+    }
+    toks = [list(map(int, r.out))
+            for r in sorted(prime + list(reqs), key=lambda r: r.rid)]
+    return sec, toks
+
+
+def _bench_prefix_tp_inner(smoke: bool) -> dict:
+    """Cache-on/off identity at TP=1 and TP=2 on a short slice of the
+    prefix trace. Must run with >= 2 visible devices (bench_prefix_cache
+    arranges that). The pager — and with it the radix cache's block
+    sharing — is shard-agnostic host metadata, so the gate is pure token
+    bit-identity, per tp and across tp."""
+    cfg = _cfg(smoke)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    arrivals, mk_reqs, mk_prime = _prefix_trace(cfg, 24, 40.0)
+    toks = {}
+    for tp in (1, 2):
+        for prefix in (False, True):
+            _, toks[tp, prefix] = _serve_prefix(cfg, params, mk_reqs(),
+                                                arrivals, prefix=prefix,
+                                                tp=tp, prime=mk_prime)
+    out = {
+        "device_count": jax.device_count(),
+        "tokens_identical_tp1": int(toks[1, True] == toks[1, False]),
+        "tokens_identical_tp2": int(toks[2, True] == toks[2, False]),
+        "tokens_identical_across_tp": int(toks[1, True] == toks[2, True]),
+    }
+    print(f"[serving] prefix_cache tp: identical tp1="
+          f"{out['tokens_identical_tp1']} tp2={out['tokens_identical_tp2']} "
+          f"across={out['tokens_identical_across_tp']}")
+    return out
+
+
+#: stdout marker the --prefix-subprocess child prints its JSON after
+_PREFIX_MARKER = "PREFIX_JSON:"
+
+
+def bench_prefix_cache(cfg, params, smoke: bool) -> dict:
+    """Prefix-caching section (module docstring, ``prefix_cache``): the
+    shared-system-prompt Poisson trace cache-off vs cache-on at TP=1,
+    plus the TP=1/TP=2 identity sub-trace (re-execed with two forced
+    host devices when this process only sees one, like bench_sharded)."""
+    # the "1000 users" trace IS the claim being gated, so smoke keeps it:
+    # max_new=2 and the shared prefill keep even 1000 users cheap
+    n_users = 1000
+    rate = 150.0
+    arrivals, mk_reqs, mk_prime = _prefix_trace(cfg, n_users, rate)
+    out = {}
+    toks = {}
+    for key, prefix in (("cache_off", False), ("cache_on", True)):
+        reqs = mk_reqs()
+        out[key], toks[key] = _serve_prefix(cfg, params, reqs, arrivals,
+                                            prefix=prefix, prime=mk_prime)
+        print(f"[serving] prefix_cache {key}: "
+              f"{out[key]['prefill_tokens']} prefill tokens, pool peak "
+              f"{out[key]['pool_peak_blocks']} blocks, "
+              f"{out[key]['wall_s']}s")
+    res = {
+        "n_users": n_users,
+        "n_system_prompts": 5,
+        "system_prompt_len": 112,
+        "eviction_policy": "lru",
+        "tokens_identical": int(toks["cache_on"] == toks["cache_off"]),
+        "prefill_tokens_ratio": round(
+            out["cache_off"]["prefill_tokens"]
+            / max(1, out["cache_on"]["prefill_tokens"]), 3),
+        "peak_blocks_ratio": round(
+            out["cache_off"]["pool_peak_blocks"]
+            / max(1, out["cache_on"]["pool_peak_blocks"]), 3),
+        **out,
+    }
+    print(f"[serving] prefix_cache: prefill tokens x"
+          f"{res['prefill_tokens_ratio']} down, peak blocks x"
+          f"{res['peak_blocks_ratio']} down, tokens identical: "
+          f"{bool(res['tokens_identical'])}")
+    if jax.device_count() >= 2:
+        res["tp"] = _bench_prefix_tp_inner(smoke)
+        return res
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, os.path.abspath(__file__), "--prefix-subprocess"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=root)
+    for line in proc.stdout.splitlines():
+        if line.startswith(_PREFIX_MARKER):
+            res["tp"] = json.loads(line[len(_PREFIX_MARKER):])
+            return res
+    res["tp"] = {"error": "prefix tp subprocess produced no result: "
+                          + (proc.stderr or proc.stdout)[-500:]}
+    return res
+
+
+def check_prefix_cache(res: dict) -> list:
+    """Gate for the prefix-cache section: bit-identical tokens cache-on
+    vs cache-off (TP=1, and TP=1/TP=2 in the sub-trace), and >=
+    MIN_PREFIX_COLLAPSE collapse of both prefill tokens and pool peak
+    blocks. Missing section = failure."""
+    nan = float("nan")
+    sec = res.get("prefix_cache")
+    if not isinstance(sec, dict):
+        return [("prefix_cache/<missing>", nan, nan)]
+    bad = []
+    if sec.get("tokens_identical") != 1:
+        bad.append(("prefix_cache/tokens_identical",
+                    float(sec.get("tokens_identical", nan)), 1.0))
+    for key in ("prefill_tokens_ratio", "peak_blocks_ratio"):
+        v = float(sec.get(key, nan))
+        if not (v >= MIN_PREFIX_COLLAPSE):
+            bad.append((f"prefix_cache/{key}", v, MIN_PREFIX_COLLAPSE))
+    tp = sec.get("tp")
+    if not isinstance(tp, dict) or "error" in tp:
+        bad.append(("prefix_cache/tp/<missing>", nan, nan))
+    else:
+        for key in ("tokens_identical_tp1", "tokens_identical_tp2",
+                    "tokens_identical_across_tp"):
+            if tp.get(key) != 1:
+                bad.append((f"prefix_cache/tp/{key}",
+                            float(tp.get(key, nan)), 1.0))
+    return bad
+
+
 def check_obs_sections(res: dict) -> list:
     """Presence/finiteness gate for the observability-driven sections —
     missing = failure, matching the tok/s gate's missing-metric rule.
@@ -715,6 +932,7 @@ def check_thresholds(res: dict) -> list:
     bad.extend(check_obs_sections(res))
     bad.extend(check_mixed_chunked(res))
     bad.extend(check_sharded(res))
+    bad.extend(check_prefix_cache(res))
     return bad
 
 
@@ -805,10 +1023,15 @@ def main(argv=None) -> int:
                          "(always on in full mode; ~1M-element tensors)")
     ap.add_argument("--sharded-subprocess", action="store_true",
                     help=argparse.SUPPRESS)  # internal: bench_sharded child
+    ap.add_argument("--prefix-subprocess", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: prefix tp child
     args = ap.parse_args(argv)
 
     if args.sharded_subprocess:
         print(_SHARDED_MARKER + json.dumps(_bench_sharded_inner(args.smoke)))
+        return 0
+    if args.prefix_subprocess:
+        print(_PREFIX_MARKER + json.dumps(_bench_prefix_tp_inner(args.smoke)))
         return 0
 
     cfg = _cfg(args.smoke)
@@ -829,6 +1052,7 @@ def main(argv=None) -> int:
     res["host_overhead_1slot"] = bench_host_overhead(cfg, params, args.smoke)
     res["saturation"] = bench_saturation(cfg, params)
     res["sharded"] = bench_sharded(args.smoke)
+    res["prefix_cache"] = bench_prefix_cache(cfg, params, args.smoke)
     if args.evaluators or not args.smoke:
         rows: list = []
         run(rows, n=1 << 16 if args.smoke else 1_000_000,

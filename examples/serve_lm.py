@@ -23,6 +23,12 @@ still bit-identical. Sampling runs on the CORDIC datapath
 too: temperature scaling is the linear-rotation multiply by the R2-LVC
 reciprocal of T, with per-request temperature/top-k/greedy mixes in the
 same batch. All sigmoid-family gates run the Q2.14 MR-HRC pipeline.
+``--prefix-cache`` (paged only) turns on the radix-tree prompt-prefix
+cache: the demo shares a system prompt across requests, so later
+admissions bind the earlier request's KV blocks (refcounted, shared)
+and resume prefill at the first uncached block — same tokens, fewer
+prefill FLOPs and pool blocks (``--prefix-eviction lru|fifo`` picks
+the reclaim order under pool pressure).
 ``--tp N`` shards the engine tensor-parallel over the mesh's ``model``
 axis (params Megatron-style, the paged KV pool on its kv-heads dim); N
 must divide the visible device count — on CPU force devices first, e.g.
@@ -81,6 +87,17 @@ def main():
                          "(0 = auto)")
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="per-iteration prefill token budget (0 = unlimited)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix cache over the paged "
+                         "pool: admissions sharing full prompt KV blocks "
+                         "with an earlier request reuse them instead of "
+                         "recomputing (same tokens). Requires --kv-impl "
+                         "paged; the demo shares a system prompt across "
+                         "requests so hits occur")
+    ap.add_argument("--prefix-eviction", default="lru",
+                    choices=["lru", "fifo"],
+                    help="prefix-cache eviction order over idle cached "
+                         "blocks under pool pressure")
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor-parallel degree over the mesh 'model' "
                          "axis (must divide the visible device count; "
@@ -115,16 +132,24 @@ def main():
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,
+                      prefix_cache=args.prefix_cache,
+                      prefix_eviction=args.prefix_eviction,
                       tp=args.tp or None,
                       obs=obs)
     if eng.mesh is not None:
         print(f"[serve_lm] mesh: {dict(eng.mesh.shape)} over "
               f"{eng.mesh.size} devices (tokens bit-identical to --tp 1)")
     rng = np.random.default_rng(0)
+    # shared system prompt (two full KV blocks) so --prefix-cache has
+    # something to hit; empty when the cache is off
+    sys_prompt = (rng.integers(0, cfg.vocab_size,
+                               2 * args.block_len).astype(np.int32)
+                  if args.prefix_cache else np.zeros(0, np.int32))
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
-        r = Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, plen).astype(np.int32),
+        tail = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        r = Request(rid=i, prompt=np.concatenate([sys_prompt, tail]),
                     max_new_tokens=args.max_new)
         reqs.append(r)
         eng.submit(r)
@@ -144,6 +169,10 @@ def main():
         print(f"[serve_lm] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
               f"blocks x {eng.block_len} positions "
               f"(dense would pin {args.slots * 128 // eng.block_len})")
+    if eng.prefix is not None:
+        print(f"[serve_lm] prefix cache ({eng.prefix.policy}): "
+              f"{eng.prefix.hits} hits / {eng.prefix.hit_blocks} blocks "
+              f"reused, {eng.prefix.evicted_blocks} evicted")
     if obs is not None:
         ttft = obs.metrics.get("engine.ttft_ms")
         print(f"[serve_lm] ttft p50/p99 {ttft.quantile(0.5):.1f}/"

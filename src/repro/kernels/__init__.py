@@ -1,31 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
-"""CORDIC Pallas kernels and their selection matrix.
+"""CORDIC Pallas kernels.
 
 Every kernel has a pure-jnp oracle in ``ref.py`` and a public jit'd entry
-in ``ops.py``; CPU runs interpret mode, TPU compiles via Mosaic.  Which
-datapath a model uses is selected per-config:
-
-========================  ======================  ===========================
-config selector           value                   kernel / path
-========================  ======================  ===========================
-``cfg.act_impl``          ``exact``               jax.nn activations
-                          ``cordic_float/fixed``  jnp engine datapaths
-                          ``cordic_pallas``       cordic_act.py (sigmoid/
-                                                  tanh/silu/exp/log/softplus/
-                                                  elu/gelu_erf, fused
-                                                  silu_mul, int sigmoid_q)
-``cfg.softmax_impl``      ``exact``               jax.nn.softmax
-                          ``cordic_fixed``        jnp Q2.14 softmax
-                          ``cordic_pallas``       softmax_cordic.py fused
-                                                  softmax_2d/log_softmax_2d
-``cfg.loss_impl``         ``exact | cordic |      train/losses.py ->
-                          cordic_pallas``         softmax_cordic.log_softmax
-``cfg.paged_attend_impl`` ``gather``              models/attention.py
-                                                  full-table gather attend
-                          ``pallas``              paged_attention.py block-
-                                                  walking decode kernels
-                                                  (gqa_decode / mla_decode)
-========================  ======================  ===========================
+in ``ops.py``; CPU runs interpret mode, TPU compiles via Mosaic. Which
+datapath a model uses is selected per-config (``cfg.act_impl``,
+``cfg.softmax_impl``, ``cfg.loss_impl``, ``cfg.kv_impl``,
+``cfg.paged_attend_impl``) — the authoritative selection-matrix table
+for all of them lives in ``docs/architecture.md``.
 """

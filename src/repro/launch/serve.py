@@ -60,6 +60,18 @@ def main(argv=None):
     ap.add_argument("--max-prefill-tokens", type=int, default=0,
                     help="per-iteration prefill token budget across "
                          "scheduled rows (0 = unlimited)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix cache over the paged "
+                         "pool (serve/prefix_cache.py): admissions whose "
+                         "prompt shares full KV blocks with an earlier "
+                         "prompt bind those blocks instead of recomputing "
+                         "them (same tokens). Requires --kv-impl paged. "
+                         "The demo prepends a shared system prompt so "
+                         "hits actually occur")
+    ap.add_argument("--prefix-eviction", default="lru",
+                    choices=["lru", "fifo"],
+                    help="prefix-cache eviction order over idle cached "
+                         "blocks when the pool runs dry")
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor-parallel degree: shard params + KV over "
                          "the mesh 'model' axis (must divide the visible "
@@ -99,6 +111,8 @@ def main(argv=None):
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,
+                      prefix_cache=args.prefix_cache,
+                      prefix_eviction=args.prefix_eviction,
                       tp=args.tp or None,
                       obs=obs)
     if eng.mesh is not None:
@@ -106,11 +120,17 @@ def main(argv=None):
               f"{eng.mesh.size} devices")
 
     rng = np.random.default_rng(0)
+    # with the prefix cache on, share a system prompt across requests so
+    # later admissions hit the radix index instead of recomputing it
+    sys_prompt = (rng.integers(0, cfg.vocab_size,
+                               2 * args.block_len).astype(np.int32)
+                  if args.prefix_cache else np.zeros(0, np.int32))
     for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 12))).astype(np.int32)
         eng.submit(Request(
             rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(4, 12))).astype(np.int32),
+            prompt=np.concatenate([sys_prompt, tail]),
             max_new_tokens=args.max_new))
     t0 = time.time()
     if obs is not None:
@@ -127,6 +147,10 @@ def main(argv=None):
         print(f"[serve] pool: peak {st.peak_in_use}/{st.num_blocks - 1} "
               f"blocks x {eng.block_len} positions, "
               f"{st.allocs} allocs, {st.alloc_failures} backpressure waits")
+    if eng.prefix is not None:
+        print(f"[serve] prefix cache ({eng.prefix.policy}): "
+              f"{eng.prefix.hits} hits / {eng.prefix.hit_blocks} blocks "
+              f"reused, {eng.prefix.evicted_blocks} evicted")
     if obs is not None:
         ttft = obs.metrics.get("engine.ttft_ms")
         tpot = obs.metrics.get("engine.tpot_ms")

@@ -7,17 +7,22 @@ recurrent-state cache.
 
 `ServeEngine` packs requests into fixed batch slots and refills them as
 sequences finish (continuous batching at step granularity). Every engine
-step issues exactly one jitted decode call regardless of occupancy; the KV
-layout behind it is selected by ``cfg.kv_impl``:
+step issues exactly one jitted decode call regardless of occupancy (the
+end-to-end dataflow picture and the full datapath selection matrix live
+in ``docs/architecture.md``); the KV layout behind it is selected by
+``cfg.kv_impl``:
 
 ``dense``  — one max_len K/V buffer per slot, stacked into a (slots, ...)
     pytree (models.transformer.stack_caches) and decoded as a vmap over the
     slot axis. Memory is slots x max_len whatever the real lengths are.
 ``paged``  — a global pool of ``block_len``-position KV blocks per layer
     (models.attention.*_init_paged_cache) with per-slot block tables, host
-    allocation in serve.kv_pager.KVPager. Admission allocates just the
-    blocks a request can reach (bucketed prompt + max_new_tokens) and frees
-    them the step it finishes, so memory follows the *actual* traffic;
+    allocation in the *refcounted* serve.kv_pager.KVPager. Admission
+    allocates just the blocks a request can reach (bucketed prompt +
+    max_new_tokens) minus any prefix-cache-shared blocks — its *unshared
+    footprint* — and drops its references the step it finishes (a block
+    rejoins the free list at refcount zero, so shared prefix blocks
+    outlive individual requests), so memory follows the *actual* traffic;
     a request that does not fit stays queued (backpressure) instead of
     crashing. Decode gathers each slot's blocks through its table and masks
     past the per-slot length — bit-identical tokens to the dense path
@@ -56,6 +61,20 @@ dispatch admission:
     table rows by value; pad rows write to scratch), pow2-padded so
     compile batch dims are bounded by log2(R)+1.
 
+``prefix_cache=True`` (paged only) adds the radix-tree prefix cache
+(serve/prefix_cache.py): admission matches the prompt's token-id blocks
+against previously prefilled prompts, binds the matched pool blocks into
+the slot's table (refcounts keep them alive and shared), and prefill
+*resumes at the first uncached block-aligned position* — a hit is
+literally prefill chunks skipped, with the resumed row pinned like a
+mid-chunk continuation. The divergent / partially-filled block is
+copy-on-write by construction: shared blocks are never written (resumed
+prefill writes only at positions >= its block-aligned start, decode only
+at positions >= the pinned length — both land in the slot's fresh
+blocks). Eviction (``prefix_eviction``: "lru" default, "fifo") reclaims
+refcount-one radix leaves when the pool runs dry. Emitted tokens stay
+bit-identical cache-on vs cache-off (tests/test_prefix_cache.py).
+
 Both default off (chunk=None, batch=1): shapes, dispatch order, and tokens
 are then bit-for-bit the legacy path. With them on, emitted tokens stay
 bit-identical to the unchunked engine — the KV prefix written is the same
@@ -85,54 +104,12 @@ Observability (repro.obs): construct the engine with ``obs=Observability()``
 engine-phase timeline) and read ``obs.metrics.snapshot()`` afterwards. All
 instrumentation is host-side: nothing here feeds a jitted function, so
 compile counts and emitted tokens are bit-identical with observability on
-or off (CI-enforced in tests/test_obs.py). Metrics emitted:
-
-    name                              type       unit      emitted at
-    --------------------------------  ---------  --------  -----------------
-    engine.requests.submitted         counter    requests  submit()
-    engine.requests.rejected          counter    requests  submit()
-                                                           (validation fail)
-    engine.requests.finished          counter    requests  _finish()
-    engine.prefill.dispatches         counter    calls     prefill phase (one
-                                                           per jit dispatch)
-    engine.prefill.rows               counter    rows      prefill phase
-                                                           (scheduled rows)
-    engine.prefill.chunks             counter    rows      prefill phase
-                                                           (chunked-prompt
-                                                           rows only)
-    engine.tokens.emitted             counter    tokens    admission + step()
-    engine.steps                      counter    steps     step()
-    engine.queue_depth                gauge      requests  step() (pre-admit)
-    engine.batch_occupancy            gauge      slots     step() (post-admit)
-    engine.ttft_ms                    histogram  ms        first token
-                                                           (admission prefill)
-    engine.tpot_ms                    histogram  ms        _finish() (decode
-                                                           interval mean)
-    engine.e2e_ms                     histogram  ms        _finish()
-    engine.prefill_ms                 histogram  ms        admission
-    engine.step_ms                    histogram  ms        step()
-    engine.phase.admit_ms             histogram  ms        step() span
-    engine.phase.dispatch_ms          histogram  ms        step() span (jit
-                                                           call, async)
-    engine.phase.host_sync_ms         histogram  ms        step() span
-                                                           (device->host)
-    engine.phase.sample_copy_ms       histogram  ms        step() span (host
-                                                           bookkeeping)
-    engine.phase.collective_ms        histogram  ms        step() span (tp>1
-                                                           only: the logits
-                                                           all-gather +
-                                                           sampling tail)
-    engine.mesh.tp                    gauge      shards    init (constant)
-    engine.mesh.devices               gauge      devices   init (constant)
-    engine.compiles.prefill/.decode   counter    compiles  compile_counts()
-                                                           delta per step
-    kv.pool.blocks_in_use             gauge      blocks    KVPager alloc/free
-    kv.pool.allocs                    counter    allocs    KVPager.alloc
-    kv.pool.alloc_failures            counter    events    KVPager.alloc
-                                                           (backpressure)
-    kv.pool.blocks_freed              counter    blocks    KVPager.free
-    fixed_point.saturation.clips{fmt=Q2.14}  counter  elements  eager
-        quantize under obs.observe_saturation (plus .elements{...} totals)
+or off (CI-enforced in tests/test_obs.py). The full metric-name reference
+(every ``engine.*`` / ``kv.pool.*`` / ``prefix.*`` / ``fixed_point.*``
+series, with types, units, and emission points) lives in
+``docs/observability.md`` — the handles themselves are registered in
+``_bind_obs_handles`` and ``KVPager.attach_metrics``, and CI's docs lane
+cross-checks the doc against the registration code in both directions.
 
 Sharding contract (``tp=N`` / ``mesh=``): the engine runs SPMD on a
 ("data","model") mesh (launch.mesh.make_host_mesh). Decode is still ONE
@@ -155,8 +132,16 @@ inside the attention datapath (the HLO-cost lane asserts this):
     paged k_pool / v_pool         (N,L,KH/tp,hd)/shard   head-parallel GQA
     MLA c_kv_pool / k_rope_pool   replicated             latent is head-less
     block tables / lens / idx     replicated             host metadata; the
-                                                         KVPager stays
-                                                         shard-agnostic
+                                                         refcounted KVPager
+                                                         (and with it the
+                                                         prefix cache's
+                                                         block sharing)
+                                                         stays shard-
+                                                         agnostic: one
+                                                         logical block id
+                                                         space, every shard
+                                                         holds a head-slice
+                                                         of every block
     tokens/rids/steps/temps/...   replicated             tiny host state
     logits                        replicated (pinned in  sampling tail runs
                                   transformer.apply)     shard-local, bit-
@@ -428,6 +413,8 @@ class ServeEngine:
                  prefill_chunk: Optional[int] = None,
                  prefill_batch: Optional[int] = None,
                  max_prefill_tokens: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_eviction: str = "lru",
                  obs: Optional[obs_lib.Observability] = None,
                  tp: Optional[int] = None,
                  mesh: Optional[Any] = None):
@@ -552,6 +539,16 @@ class ServeEngine:
             self.pager: Optional[kvp.KVPager] = kvp.KVPager(
                 num_blocks, self.block_len, slots,
                 metrics=self.obs.metrics if self.obs.enabled else None)
+            if prefix_cache:
+                from repro.serve.prefix_cache import PrefixCache
+
+                # block-table indirection + refcounts make sharing shard-
+                # safe for free: one logical block id space per engine
+                # regardless of tp (see module docstring table)
+                self.prefix: Optional[PrefixCache] = PrefixCache(
+                    self.pager, self.block_len, policy=prefix_eviction)
+            else:
+                self.prefix = None
             self._caches = tf.init_paged_cache(
                 cfg, slots, num_blocks, self.block_len, self.max_blocks,
                 jnp.float32)
@@ -596,7 +593,13 @@ class ServeEngine:
                     make_paged_decode_step(cfg, greedy_only=True))
                 self._clear_slot = jax.jit(_clear_fn, donate_argnums=(0,))
         else:
+            if prefix_cache:
+                raise ValueError(
+                    "prefix_cache shares KV pool blocks through the block-"
+                    "table indirection; serve it with kv_impl='paged' (the "
+                    "dense plane has per-slot buffers, nothing to share)")
             self.pager = None
+            self.prefix = None
             self._caches = tf.stack_caches(
                 [tf.init_cache(cfg, 1, max_len, jnp.float32)
                  for _ in range(slots)])
@@ -694,6 +697,14 @@ class ServeEngine:
                                      unit="calls")
         self._m_pre_rows = m.counter("engine.prefill.rows", unit="rows")
         self._m_pre_chunks = m.counter("engine.prefill.chunks", unit="rows")
+        self._m_pre_tokens = m.counter("engine.prefill.tokens", unit="tokens")
+        # prefix-cache series (stay zero with the cache off; the bench
+        # gate reads prefill.tokens + pool peak to prove the collapse)
+        self._m_prefix_hits = m.counter("prefix.hit_tokens", unit="tokens")
+        self._m_prefix_shared = m.gauge("prefix.blocks_shared",
+                                        unit="blocks")
+        self._m_blocks_saved = m.counter("kv.pool.blocks_saved",
+                                         unit="blocks")
         self._m_tokens = m.counter("engine.tokens.emitted", unit="tokens")
         self._m_steps = m.counter("engine.steps", unit="steps")
         self._m_queue = m.gauge("engine.queue_depth", unit="requests")
@@ -786,8 +797,10 @@ class ServeEngine:
         if self.pager is not None:
             need = self._blocks_for(req)
             if need > self.pager.capacity:
-                return (f"needs {need} KV blocks, pool has "
-                        f"{self.pager.capacity} allocatable")
+                return (f"needs {need} KV blocks worst-case — admission "
+                        f"budgets the unshared footprint, which with no "
+                        f"prefix hit is the whole request — but the pool "
+                        f"has {self.pager.capacity} allocatable")
         return None
 
     def _reject(self, req: Request, reason: str) -> None:
@@ -874,7 +887,12 @@ class ServeEngine:
         self._pending.pop(s, None)
         self.scheduler.drop_slot(s)
         if self.pager is not None:
+            # drops the slot's reference on every block it bound; blocks
+            # the prefix cache (or a sibling slot) still references stay
+            # resident, the rest rejoin the free list
             self.pager.free(s)
+            if self.prefix is not None:
+                self._m_prefix_shared.set(self.pager.blocks_shared)
             self._caches = self._clear_slot(self._caches,
                                             jnp.asarray(s, jnp.int32))
         self._temps[s] = 1.0
@@ -935,37 +953,77 @@ class ServeEngine:
                                  self.max_len - len(req.prompt) + 1)
 
     # -- the per-iteration prefill phase ------------------------------------
-    def _admit_slot(self, req: Request) -> Optional[int]:
+    def _admit_slot(self, req: Request):
         """Scheduler seating callback: pick a free slot and (paged)
-        allocate the request's worst-case blocks. None = cannot seat right
-        now (no free slot, or pool backpressure — the head waits, FIFO)."""
+        allocate the request's blocks — with the prefix cache on, only its
+        *unshared footprint*: matched pool blocks bind into the slot's
+        table (match's pins transfer to the slot) and prefill resumes past
+        them, so a hit allocates and computes only the uncached tail.
+        Returns the slot id, ``(slot, start)`` on a prefix hit, or None
+        when the request cannot be seated right now (no free slot, or
+        pool backpressure — the head waits, FIFO)."""
         s = next((i for i in range(self.slots)
                   if self._active[i] is None), None)
         if s is None:
             return None
         need = 0
+        start = 0
         if self.pager is not None:
-            need = self._blocks_for(req)
-            blocks = self.pager.alloc(s, need)
+            need_total = self._blocks_for(req)
+            shared: List[int] = []
+            if self.prefix is not None:
+                matched = self.prefix.match(req.prompt)      # pinned for us
+                start = self.scheduler.resume_start(
+                    len(req.prompt), len(matched) * self.block_len)
+                m_used = start // self.block_len
+                if m_used < len(matched):
+                    # row-geometry alignment used fewer blocks than the
+                    # cache matched: drop the surplus pins right away
+                    self.pager.release(matched[m_used:])
+                shared = matched[:m_used]
+            need = need_total - len(shared)
+            if self.prefix is not None and not self.pager.can_alloc(need):
+                self.prefix.evict_until(need)
+            blocks = self.pager.alloc(s, need, shared=shared)
             if blocks is None:
+                if shared:                # unwind the match pins; re-match
+                    self.pager.release(shared)        # on the next attempt
                 return None
             row = np.zeros(self.max_blocks, np.int32)
-            row[:need] = blocks
+            row[:len(shared)] = shared
+            row[len(shared):need_total] = blocks
             self._slot_rows[s] = row
+            if start:
+                self._m_prefix_hits.inc(start)
+                self._m_blocks_saved.inc(len(shared))
+            if self.prefix is not None:
+                self._m_prefix_shared.set(self.pager.blocks_shared)
         self._active[s] = req
         req.t_admit = time.perf_counter()
         if self.obs.enabled:
             ev = {"slot": s}
             if self.pager is not None:
                 ev["blocks"] = need
+                if start:
+                    ev["prefix_tokens"] = start
             self.obs.request_event("admit", req.rid, ev)
-        return s
+        return (s, start) if start else s
 
     def _complete_prefill(self, req: Request, s: int, logits) -> None:
         """Final prefill row landed: sample the first token; the slot joins
-        decode next iteration (or frees immediately on eos / budget-1)."""
+        decode next iteration (or frees immediately on eos / budget-1).
+        With the prefix cache on, the prompt's full blocks are indexed
+        here — KV bytes for a prefix are deterministic (chunked-vs-
+        unchunked identity already enforces this), so the blocks are
+        shareable the moment the last prompt position is written."""
         first = self._sample_first(req, logits)
         self._obs_prefilled(req, first)
+        if self.prefix is not None:
+            nfull = len(req.prompt) // self.block_len
+            if nfull:
+                self.prefix.insert(
+                    req.prompt,
+                    [int(b) for b in self._slot_rows[s][:nfull]])
         if self._finishes_at_prefill(req, first):
             self._release_slot(s)
         else:
@@ -1051,12 +1109,28 @@ class ServeEngine:
         if not rows:
             return 0
         self._m_pre_rows.inc(len(rows))
+        self._m_pre_tokens.inc(sum(r.width for r in rows))
         n_chunked = sum(1 for r in rows if not (r.fresh and r.final))
         if n_chunked:
             self._m_pre_chunks.inc(n_chunked)
         if self.kv_impl == "paged":
-            for i in range(0, len(rows), self.prefill_batch):
-                self._dispatch_prefill_paged(rows[i:i + self.prefill_batch])
+            # pack rows into multi-row dispatches, never letting a group's
+            # shared width push any row past max_len: a resumed row's
+            # start + its own width fits by construction (resume_start),
+            # but a wider groupmate would widen it into scatter-index
+            # clamping territory — flush the group instead
+            group: List[PrefillRow] = []
+            gw = 0
+            for row in rows:
+                w = max(gw, row.width)
+                if group and (len(group) >= self.prefill_batch or any(
+                        r.start + w > self.max_len for r in group + [row])):
+                    self._dispatch_prefill_paged(group)
+                    group, w = [], row.width
+                group.append(row)
+                gw = w
+            if group:
+                self._dispatch_prefill_paged(group)
         else:
             for row in rows:
                 self._dispatch_prefill_dense(row)
@@ -1110,8 +1184,11 @@ class ServeEngine:
                     raise RuntimeError(
                         f"request {self._queue[0].rid} can never be "
                         f"admitted: needs "
-                        f"{self._blocks_for(self._queue[0])} KV blocks, "
-                        f"pool has {self.pager.capacity} allocatable")
+                        f"{self._blocks_for(self._queue[0])} KV blocks "
+                        f"worst-case (admission budgets the unshared "
+                        f"footprint; with no prefix hit that is the whole "
+                        f"request), pool has {self.pager.capacity} "
+                        f"allocatable")
                 return 0
             # prefill-only iteration: chunks advanced (or every admitted
             # request finished at prefill); no decode work exists yet

@@ -23,6 +23,13 @@ Policy, per iteration (``plan()``):
    width per iteration. At least one row always goes through when prefill
    work exists, so progress is guaranteed.
 
+A prefix-cache hit (serve/prefix_cache.py) is *prefill chunks skipped*:
+admission binds the matched pool blocks into the slot's table and returns
+``(slot, start)``, and the first row covers positions ``start..`` instead
+of 0 — ``resume_start`` picks the largest block-aligned start whose row
+geometry stays inside the slot's table, so a resumed prompt behaves
+exactly like a mid-chunk continuation of today's chunked prefill.
+
 Chunk geometry: a prompt of length P with chunk width C covers positions
 ``[0, ceil(P/C)*C)`` in exactly ``ceil(P/C)`` chunks — every chunk is full
 width (compile shapes stay bounded), the last chunk's pad tail is causally
@@ -112,26 +119,55 @@ class IterationScheduler:
         """Forget any mid-prefill state for ``slot`` (engine slot release)."""
         self._chunking.pop(slot, None)
 
-    def single_shot(self, plen: int) -> bool:
-        """True when a prompt of length ``plen`` prefills in one row."""
+    def single_shot(self, plen: int, start: int = 0) -> bool:
+        """True when the remaining prompt (positions ``start..plen``)
+        prefills in one row. ``start`` > 0 is a prefix-cache resume: the
+        first ``start`` positions are already in shared pool blocks."""
+        remaining = plen - start
         if self.prefill_chunk is None:
             return True
-        if plen <= self.prefill_chunk:
+        if remaining <= self.prefill_chunk:
             return True
-        return kvp.bucket_for(plen, self.buckets) <= self.prefill_chunk
+        return kvp.bucket_for(remaining, self.buckets) <= self.prefill_chunk
 
-    def admission_width(self, plen: int) -> int:
-        """Width of the first prefill row for a prompt of length ``plen``."""
-        if not self.single_shot(plen):
+    def admission_width(self, plen: int, start: int = 0) -> int:
+        """Width of the first prefill row for a prompt of length ``plen``
+        resuming at position ``start`` (0 = no prefix hit)."""
+        remaining = plen - start
+        if not self.single_shot(plen, start):
             return self.prefill_chunk
         if self.buckets is None:
-            return plen
-        w = kvp.bucket_for(plen, self.buckets)
-        # plen <= chunk but no bucket in [plen, chunk]: one chunk-wide row
-        # covers the whole prompt (still block-aligned)
+            return remaining
+        w = kvp.bucket_for(remaining, self.buckets)
+        # remaining <= chunk but no bucket in [remaining, chunk]: one
+        # chunk-wide row covers the whole tail (still block-aligned)
         if self.prefill_chunk is not None and w > self.prefill_chunk:
             w = self.prefill_chunk
         return w
+
+    def resume_start(self, plen: int, cached_len: int) -> int:
+        """Largest safe prefill resume position <= ``cached_len``.
+
+        ``cached_len`` is the prefix-cache hit in tokens (a multiple of
+        ``block_len``). The returned start keeps every subsequent row
+        inside the slot's table: with chunking it aligns down to the
+        chunk grid (continuation chunks then land exactly like mid-chunk
+        prefill today); single-shot it backs off block-by-block until
+        ``start + bucket_for(remaining) <= max_len``, so the padded row
+        can never overrun ``max_len`` and trip scatter-index clamping.
+        """
+        if self.buckets is None or cached_len <= 0:
+            return 0                      # recurrent archs never resume
+        start = (cached_len // self.block_len) * self.block_len
+        if self.prefill_chunk is not None:
+            # chunk-grid alignment: every row (first included, since
+            # admission_width caps at prefill_chunk) ends <= max_len
+            # because max_len % prefill_chunk == 0
+            return (start // self.prefill_chunk) * self.prefill_chunk
+        while start > 0 and start + self.admission_width(plen, start) \
+                > self.max_len:
+            start -= self.block_len
+        return max(0, start)
 
     # -- the per-iteration decision -----------------------------------------
     def plan(self, admit_fn: Callable[[object], Optional[int]]
@@ -140,8 +176,11 @@ class IterationScheduler:
 
         ``admit_fn(req)`` is the engine's seating callback: it picks a free
         slot, allocates pool blocks (paged), marks the slot active, and
-        returns the slot id — or None when the request cannot be seated
-        right now (backpressure; the head stays queued, FIFO preserved).
+        returns the slot id — or ``(slot, start)`` when a prefix-cache hit
+        binds shared blocks and prefill resumes at block-aligned position
+        ``start`` (see ``resume_start``) — or None when the request cannot
+        be seated right now (backpressure; the head stays queued, FIFO
+        preserved).
         """
         rows: List[PrefillRow] = []
         used = 0
@@ -167,17 +206,20 @@ class IterationScheduler:
         while self.queue:
             req = self.queue[0]
             plen = len(req.prompt)
-            width = self.admission_width(plen)
-            final = self.single_shot(plen)
-            if rows and used + width > budget:
+            # worst-case (no-hit) width for the budget check; the actual
+            # admitted width only shrinks on a prefix hit
+            if rows and used + self.admission_width(plen) > budget:
                 break
-            slot = admit_fn(req)
-            if slot is None:            # no free slot / pool backpressure
+            seat = admit_fn(req)
+            if seat is None:            # no free slot / pool backpressure
                 break
+            slot, start = seat if isinstance(seat, tuple) else (seat, 0)
+            width = self.admission_width(plen, start)
+            final = self.single_shot(plen, start)
             self.queue.popleft()
-            rows.append(PrefillRow(req=req, slot=slot, start=0, width=width,
-                                   final=final, fresh=True))
+            rows.append(PrefillRow(req=req, slot=slot, start=start,
+                                   width=width, final=final, fresh=True))
             used += width
             if not final:
-                self._chunking[slot] = (req, width)
+                self._chunking[slot] = (req, start + width)
         return rows

@@ -1,0 +1,150 @@
+"""Docs lane: the markdown tree must not rot.
+
+Two contracts, both pure-host (no jax import):
+
+1. Intra-repo references resolve — markdown links ``[text](path)`` and
+   backticked file paths in README.md + docs/*.md point at files that
+   exist.
+2. ``docs/observability.md`` and the metric-registration code agree in
+   BOTH directions: every metric name documented exists in
+   ``src/repro/obs/`` / ``serve/engine.py`` / ``serve/kv_pager.py``,
+   and every name registered there is documented. Dynamic names are
+   compared as wildcard-normalized patterns (``engine.phase.<name>_ms``
+   in the doc == ``f"engine.phase.{name}_ms"`` in code).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OBS_DOC = ROOT / "docs" / "observability.md"
+
+#: markdown files whose links and path references must resolve
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+#: files whose metric registrations the doc must mirror
+METRIC_SOURCE_FILES = [
+    *sorted((ROOT / "src" / "repro" / "obs").glob("*.py")),
+    ROOT / "src" / "repro" / "serve" / "engine.py",
+    ROOT / "src" / "repro" / "serve" / "kv_pager.py",
+]
+
+#: a documented metric name starts with one of these
+METRIC_PREFIXES = ("engine.", "kv.pool.", "prefix.", "fixed_point.")
+
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_TICK_RE = re.compile(r"`([^`\n]+)`")
+# registration call with the name literal on the same line, e.g.
+#   m.counter("engine.steps", ...)   metrics.gauge("kv.pool...", ...)
+#   registry.counter(f"fixed_point.saturation.clips{{fmt={fmt}}}", ...)
+_REG_RE = re.compile(r"\.(?:counter|gauge|histogram)\(\s*(f?)\"([^\"]+)\"")
+_PATH_EXT = (".py", ".md", ".yml", ".yaml", ".json", ".txt", ".ini",
+             ".npz", ".cfg", ".toml")
+
+
+def _strip_fences(text: str) -> str:
+    return _FENCE_RE.sub("", text)
+
+
+def _normalize_doc_name(name: str) -> str:
+    """``engine.phase.<name>_ms`` -> ``engine.phase.*_ms``;
+    ``...{fmt=...}`` -> ``...{fmt=*}``."""
+    name = re.sub(r"<[^>]*>", "*", name)
+    return name.replace("...", "*")
+
+
+def _normalize_code_name(name: str, is_fstring: bool) -> str:
+    """f-string replacement fields -> ``*``; ``{{``/``}}`` -> literal.
+    Fields are identifier-shaped, so ``{{fmt={fmt}}}`` normalizes field
+    first (``{{fmt=*}}``) then unescapes to ``{fmt=*}``."""
+    if is_fstring:
+        name = re.sub(r"\{[A-Za-z_][A-Za-z0-9_.\[\]]*\}", "*", name)
+        name = name.replace("{{", "{").replace("}}", "}")
+    return name
+
+
+def _doc_metric_names() -> set:
+    text = _strip_fences(OBS_DOC.read_text())
+    out = set()
+    for m in _TICK_RE.finditer(text):
+        name = m.group(1)
+        if name.startswith(METRIC_PREFIXES) and "/" not in name \
+                and " " not in name:
+            out.add(_normalize_doc_name(name))
+    return out
+
+
+def _code_metric_names() -> set:
+    out = set()
+    for path in METRIC_SOURCE_FILES:
+        for m in _REG_RE.finditer(path.read_text()):
+            name = _normalize_code_name(m.group(2), bool(m.group(1)))
+            if name.startswith(METRIC_PREFIXES):
+                out.add(name)
+    return out
+
+
+# -- 1. references resolve ---------------------------------------------------
+def test_markdown_links_resolve():
+    missing = []
+    for doc in DOC_FILES:
+        for m in _LINK_RE.finditer(_strip_fences(doc.read_text())):
+            target = m.group(1).split("#")[0]
+            if not target or target.startswith(("http://", "https://",
+                                               "mailto:")):
+                continue
+            if not (doc.parent / target).exists():
+                missing.append(f"{doc.relative_to(ROOT)} -> {target}")
+    assert not missing, f"broken markdown links: {missing}"
+
+
+def test_backticked_paths_exist():
+    """Backticked repo paths in the docs tree must exist (root-relative,
+    or src/repro-relative for the short ``serve/engine.py`` style)."""
+    missing = []
+    for doc in DOC_FILES:
+        for m in _TICK_RE.finditer(_strip_fences(doc.read_text())):
+            ref = m.group(1)
+            if "/" not in ref or " " in ref or "*" in ref \
+                    or ref.startswith(("/", "<", "http")) \
+                    or not ref.endswith(_PATH_EXT):
+                continue
+            if not ((ROOT / ref).exists()
+                    or (ROOT / "src" / "repro" / ref).exists()):
+                missing.append(f"{doc.relative_to(ROOT)} -> {ref}")
+    assert not missing, f"dangling path references: {missing}"
+
+
+# -- 2. metric names: doc <-> code, both directions --------------------------
+def test_doc_metrics_exist_in_code():
+    doc, code = _doc_metric_names(), _code_metric_names()
+    assert doc, "no metric names parsed from docs/observability.md"
+    phantom = doc - code
+    assert not phantom, (
+        f"documented in docs/observability.md but registered nowhere in "
+        f"{[str(p.relative_to(ROOT)) for p in METRIC_SOURCE_FILES]}: "
+        f"{sorted(phantom)}")
+
+
+def test_code_metrics_documented():
+    doc, code = _doc_metric_names(), _code_metric_names()
+    assert code, "no metric registrations parsed from source"
+    undocumented = code - doc
+    assert not undocumented, (
+        f"registered in code but missing from docs/observability.md: "
+        f"{sorted(undocumented)}")
+
+
+def test_known_series_present():
+    """Spot-check the series the benchmarks gate on, so a refactor that
+    silently breaks the regexes above cannot pass both directions by
+    parsing empty sets of the same wrong shape."""
+    doc = _doc_metric_names()
+    for name in ("engine.ttft_ms", "engine.prefill.tokens",
+                 "prefix.hit_tokens", "prefix.blocks_shared",
+                 "kv.pool.blocks_saved", "kv.pool.blocks_in_use",
+                 "engine.phase.*_ms",
+                 "fixed_point.saturation.clips{fmt=*}"):
+        assert name in doc, f"{name} missing from docs/observability.md"

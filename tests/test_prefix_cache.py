@@ -1,0 +1,456 @@
+"""Prefix-cache tests (serve/prefix_cache.py + the refcounted KVPager +
+the resumed-prefill path in serve/engine.py):
+
+* refcount lifecycle — alloc mints at refcount 1, retain/release adjust,
+  free-at-zero only, scratch block refcount-pinned (never retained,
+  released, or handed out), shared pins transfer through
+  ``alloc(..., shared=)``;
+* radix index unit behavior — insert/match at block granularity, the
+  (plen-1)//block_len match cap, mid-edge partial matches, edge splits
+  on divergence, duplicate inserts keeping the incumbent block ids;
+* eviction — LRU vs FIFO victim order over refcount-one leaves, blocks
+  still bound by a live slot never evicted, evict_until backpressure
+  fallback when nothing is evictable;
+* COW regression — the bytes of a shared pool block never change while a
+  sibling request prefills/decodes through the shared prefix (resumed
+  prefill writes only at positions >= its block-aligned start, decode
+  only past the pinned length — both land in the sibling's own blocks);
+* bit-identity — the acceptance bar: cache-on serving emits token
+  streams bit-identical to cache-off, greedy AND seeded sampling, GQA
+  and MLA attention, gather and pallas paged decode, chunked and
+  unchunked; dense engines reject prefix_cache at init.
+
+MoE carve-out (as in tests/test_scheduler.py): the MLA identity runs use
+MLA attention with the dense FFN (block_pattern mla_dense) — capacity-
+factor MoE routing depends on the dispatch width, so it is not invariant
+to how a prompt is split, prefix-resume included.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.serve import kv_pager as kvp
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.sampling import SamplingParams
+
+_SOFTMAX_BY_BACKEND = {None: "exact", "jnp": "cordic_fixed",
+                       "pallas_interpret": "cordic_pallas"}
+_BACKEND = os.environ.get("REPRO_TEST_BACKEND")
+assert _BACKEND in _SOFTMAX_BY_BACKEND, \
+    f"REPRO_TEST_BACKEND={_BACKEND!r} not in " \
+    f"{sorted(filter(None, _SOFTMAX_BY_BACKEND))}"
+
+
+# ---------------------------------------------------------------------------
+# Refcount lifecycle (pure host logic, no jax)
+# ---------------------------------------------------------------------------
+def test_alloc_mints_refcount_one_and_free_at_zero():
+    p = kvp.KVPager(num_blocks=6, block_len=4, slots=2)
+    blocks = p.alloc(0, 3)
+    assert all(p.refcount(b) == 1 for b in blocks)
+    p.retain(blocks[:1])
+    assert p.refcount(blocks[0]) == 2
+    # slot free drops one ref: the retained block stays resident
+    assert p.free(0) == 2
+    assert p.refcount(blocks[0]) == 1
+    assert p.blocks_in_use == 1
+    assert p.release(blocks[:1]) == 1
+    assert p.blocks_in_use == 0
+    assert p.blocks_free == 5
+
+
+def test_scratch_block_refcount_pinned():
+    p = kvp.KVPager(num_blocks=4, block_len=4, slots=1)
+    assert p.refcount(kvp.SCRATCH_BLOCK) == 1
+    with pytest.raises(RuntimeError, match="scratch"):
+        p.retain([kvp.SCRATCH_BLOCK])
+    with pytest.raises(RuntimeError, match="scratch"):
+        p.release([kvp.SCRATCH_BLOCK])
+    # exhaust the pool: scratch is still never handed out
+    got = p.alloc(0, 3)
+    assert kvp.SCRATCH_BLOCK not in got
+    assert kvp.SCRATCH_BLOCK not in p._free
+
+
+def test_retain_release_nonresident_raises():
+    p = kvp.KVPager(num_blocks=4, block_len=4, slots=1)
+    with pytest.raises(RuntimeError, match="non-resident"):
+        p.retain([2])
+    with pytest.raises(RuntimeError, match="non-resident"):
+        p.release([2])
+
+
+def test_alloc_shared_transfers_pins():
+    """alloc(shared=...) budgets only the fresh blocks and adopts the
+    caller's pins on the shared prefix — free(slot) then drops exactly
+    one reference per block."""
+    p = kvp.KVPager(num_blocks=8, block_len=4, slots=2)
+    a = p.alloc(0, 3)
+    p.retain(a[:2])                          # the "cache's" pins
+    fresh = p.alloc(1, 2, shared=a[:2])      # pins transfer to slot 1
+    assert len(fresh) == 2 and set(fresh).isdisjoint(a)
+    assert p.owned(1) == tuple(a[:2] + fresh)
+    assert p.refcount(a[0]) == 2             # slot 0 + slot 1
+    assert p.blocks_shared == 2
+    p.free(0)
+    assert p.refcount(a[0]) == 1             # slot 1 keeps the prefix alive
+    assert p.refcount(a[2]) == 0             # unshared block freed
+    assert p.free(1) == 4
+    assert p.blocks_in_use == 0
+
+
+def test_all_or_nothing_preserved_with_shared_prefix():
+    """Backpressure still counts only the unshared footprint: a request
+    whose fresh-block need exceeds the free list holds nothing, and the
+    shared pins stay with the caller to unwind."""
+    p = kvp.KVPager(num_blocks=6, block_len=4, slots=2)
+    a = p.alloc(0, 4)
+    p.retain(a[:2])
+    assert p.alloc(1, 2, shared=a[:2]) is None     # only 1 free block
+    assert p.owned(1) == ()
+    assert p.stats().alloc_failures == 1
+    assert p.refcount(a[0]) == 2                   # pin untouched
+
+
+# ---------------------------------------------------------------------------
+# Radix index: insert / match / split at block granularity
+# ---------------------------------------------------------------------------
+def _pager_and_cache(num_blocks=32, block_len=4, policy="lru"):
+    p = kvp.KVPager(num_blocks=num_blocks, block_len=block_len, slots=8)
+    return p, PrefixCache(p, block_len, policy=policy)
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_match_on_empty_cache_is_miss():
+    _, c = _pager_and_cache()
+    assert c.match(_toks(*range(12))) == []
+    assert c.hits == 0
+
+
+def test_insert_then_match_at_block_granularity():
+    p, c = _pager_and_cache(block_len=4)
+    toks = _toks(*range(11))                 # 2 full blocks + partial
+    blocks = p.alloc(0, 3)
+    assert c.insert(toks, blocks) == 2       # only full prompt blocks
+    assert p.refcount(blocks[0]) == 2        # slot + cache
+    assert p.refcount(blocks[2]) == 1        # partial block never indexed
+    # same prompt: both full blocks match (cap (11-1)//4 = 2)
+    got = c.match(toks)
+    assert got == blocks[:2]
+    assert p.refcount(blocks[0]) == 3        # match pinned it for the caller
+    p.release(got)
+
+
+def test_match_cap_leaves_one_token_to_prefill():
+    """A prompt fully covered by indexed blocks still matches at most
+    (plen-1)//B blocks, so the logits that emit the first token exist."""
+    p, c = _pager_and_cache(block_len=4)
+    toks = _toks(*range(8))                  # exactly 2 blocks
+    c.insert(toks, p.alloc(0, 2))
+    got = c.match(toks)
+    assert len(got) == 1                     # (8-1)//4 = 1, never 2
+    p.release(got)
+
+
+def test_match_stops_at_divergence_and_partial_edge():
+    p, c = _pager_and_cache(block_len=2)
+    blocks = p.alloc(0, 3)
+    c.insert(_toks(1, 2, 3, 4, 5, 6), blocks)
+    # diverges in the second block: only block 0 matches
+    got = c.match(_toks(1, 2, 9, 9, 5, 6, 7))
+    assert got == blocks[:1]
+    p.release(got)
+
+
+def test_insert_splits_edge_on_divergence():
+    """Two prompts sharing one block then diverging split the edge: the
+    shared block stays indexed once, both suffixes are reachable."""
+    p, c = _pager_and_cache(block_len=2)
+    a = p.alloc(0, 3)
+    c.insert(_toks(1, 2, 3, 4, 5, 6), a)
+    b = p.alloc(1, 3)
+    assert c.insert(_toks(1, 2, 7, 8, 9, 10), b) == 2   # suffix only
+    assert p.refcount(a[0]) == 2            # slot 0 + cache, nothing else
+    assert p.refcount(b[0]) == 1            # duplicate of a[0]: not indexed
+    ga = c.match(_toks(1, 2, 3, 4, 5, 6, 99))
+    gb = c.match(_toks(1, 2, 7, 8, 9, 10, 99))
+    assert ga == a and gb == [a[0]] + b[1:]
+    p.release(ga)
+    p.release(gb)
+
+
+def test_insert_duplicate_keeps_incumbent_blocks():
+    p, c = _pager_and_cache(block_len=4)
+    toks = _toks(*range(9))
+    a = p.alloc(0, 2)
+    assert c.insert(toks, a) == 2
+    b = p.alloc(1, 2)
+    assert c.insert(toks, b) == 0           # incumbent wins, no new pins
+    assert p.refcount(b[0]) == 1
+    got = c.match(toks)
+    assert got == a[:2]
+    p.release(got)
+
+
+# ---------------------------------------------------------------------------
+# Eviction
+# ---------------------------------------------------------------------------
+def test_evict_lru_order_and_live_blocks_survive():
+    p, c = _pager_and_cache(num_blocks=9, block_len=2)
+    a = p.alloc(0, 2)
+    c.insert(_toks(1, 2, 3, 4), a)
+    b = p.alloc(1, 2)
+    c.insert(_toks(9, 8, 7, 6), b)
+    p.free(0)                               # a now cache-only (refcount 1)
+    p.free(1)                               # b too
+    got = c.match(_toks(9, 8, 7, 6, 0))     # touch b: a becomes LRU victim
+    p.release(got)
+    # pool: 8 allocatable, 4 resident (cache), 4 free; want 6 fresh
+    assert c.evict_until(6)
+    assert p.blocks_free >= 6
+    assert p.refcount(a[0]) == 0            # LRU leaf evicted first
+    assert p.refcount(b[0]) == 1            # recently-matched edge kept
+
+
+def test_evict_fifo_order():
+    p, c = _pager_and_cache(num_blocks=9, block_len=2, policy="fifo")
+    a = p.alloc(0, 2)
+    c.insert(_toks(1, 2, 3, 4), a)
+    b = p.alloc(1, 2)
+    c.insert(_toks(9, 8, 7, 6), b)
+    p.free(0)
+    p.free(1)
+    got = c.match(_toks(1, 2, 3, 4, 0))     # touching a does NOT save it
+    p.release(got)
+    assert c.evict_until(6)
+    assert p.refcount(a[0]) == 0            # oldest-inserted evicted first
+    assert p.refcount(b[0]) == 1
+
+
+def test_evict_never_touches_slot_bound_blocks():
+    """Blocks a live slot still references (refcount >= 2) are not
+    evictable; evict_until reports failure instead of reclaiming them."""
+    p, c = _pager_and_cache(num_blocks=5, block_len=2)
+    a = p.alloc(0, 2)
+    c.insert(_toks(1, 2, 3, 4), a)          # slot 0 alive: refcounts 2
+    assert not c.evict_until(4)             # nothing evictable
+    assert p.refcount(a[0]) == 2
+    p.free(0)                               # cache-only now
+    assert c.evict_until(4)
+    assert p.blocks_free == 4
+
+
+def test_evicted_prefix_no_longer_matches():
+    p, c = _pager_and_cache(num_blocks=5, block_len=2)
+    a = p.alloc(0, 2)
+    c.insert(_toks(1, 2, 3, 4), a)
+    p.free(0)
+    assert c.evict_until(4)
+    assert c.match(_toks(1, 2, 3, 4, 5)) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: COW + bit-identity
+# ---------------------------------------------------------------------------
+def _cfg(arch="yi-9b"):
+    cfg = dataclasses.replace(configs.get_smoke(arch, act_impl="exact"),
+                              softmax_impl=_SOFTMAX_BY_BACKEND[_BACKEND])
+    if arch == "deepseek-v2-lite-16b":
+        cfg = dataclasses.replace(
+            cfg, block_pattern=("mla_dense",) * cfg.num_layers)
+    return cfg
+
+
+def _mk_reqs(cfg, *, seed=7, shared_len=24):
+    """Mixed requests over two shared system prompts + unique tails,
+    mixed greedy/sampling so both decode variants and the per-request
+    key streams run through the resumed-prefill path."""
+    rng = np.random.default_rng(seed)
+    sys_prompts = [rng.integers(0, cfg.vocab_size, shared_len)
+                   for _ in range(2)]
+    kinds = [SamplingParams(greedy=True), SamplingParams(temperature=2.5),
+             SamplingParams(temperature=1.5, top_k=8), None]
+    reqs = []
+    for i, tail_len in enumerate([5, 11, 2, 8, 15, 4]):
+        tail = rng.integers(0, cfg.vocab_size, tail_len)
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([sys_prompts[i % 2], tail]),
+            max_new_tokens=5, sampling=kinds[i % len(kinds)]))
+    return reqs
+
+
+def _serve(cfg, params, reqs, **kw):
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("kv_impl", "paged")
+    eng = ServeEngine(cfg, params, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, [r.out for r in reqs]
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "deepseek-v2-lite-16b"])
+@pytest.mark.parametrize("chunk", [None, 16])
+def test_prefix_cache_bit_identical(arch, chunk):
+    """The acceptance bar: cache-on serving emits streams bit-identical
+    to cache-off — GQA and MLA, chunked and unchunked, mixed sampling —
+    while actually hitting (requests admitted after the first wave share
+    the warm system-prompt blocks)."""
+    cfg = _cfg(arch)
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    _, base = _serve(cfg, params, _mk_reqs(cfg), prefill_chunk=chunk)
+    eng, got = _serve(cfg, params, _mk_reqs(cfg), prefill_chunk=chunk,
+                      prefix_cache=True)
+    assert got == base
+    assert eng.prefix.hits >= 1             # sharing actually happened
+    assert eng.prefix.hit_blocks >= 1
+
+
+def test_prefix_cache_bit_identical_pallas():
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    _, base = _serve(cfg, params, _mk_reqs(cfg))
+    eng, got = _serve(cfg, params, _mk_reqs(cfg), prefix_cache=True,
+                      paged_attend_impl="pallas")
+    assert got == base
+    assert eng.prefix.hits >= 1
+
+
+def test_prefix_cache_rejected_on_dense_plane():
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="dense",
+                    prefix_cache=True)
+
+
+def test_cow_shared_block_bytes_never_mutate():
+    """The COW regression: while a sibling request prefills + decodes
+    through a shared prefix, the shared pool blocks' bytes stay
+    bit-identical — the sibling's writes all land in its own fresh
+    blocks."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(4))
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, 24)
+    a = Request(rid=0, prompt=np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, 3)]), max_new_tokens=12)
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged",
+                      block_len=8, prefix_cache=True)
+    eng.submit(a)
+    eng.step()                              # a prefilled + indexed
+    shared_blocks = [int(x) for x in eng.pager.owned(0)[:3]]  # 24 // 8
+
+    def pool_bytes():
+        out = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                eng._caches)[0]:
+            if getattr(path[-1], "key", "").endswith("_pool"):
+                arr = np.asarray(leaf)
+                # stacked segments carry leading layer axes
+                arr = arr.reshape((-1,) + arr.shape[arr.ndim - 4:]) \
+                    if arr.ndim > 4 else arr[None]
+                out.append(arr[:, shared_blocks].copy())
+        assert out
+        return out
+
+    before = pool_bytes()
+    b = Request(rid=1, prompt=np.concatenate([shared, rng.integers(
+        0, cfg.vocab_size, 7)]), max_new_tokens=12)
+    eng.submit(b)
+    for _ in range(6):
+        eng.step()                          # b resumes through the prefix
+    assert len(b.out) >= 1
+    assert eng.prefix.hit_blocks >= 3       # b actually shared the blocks
+    after = pool_bytes()
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, y)
+    eng.run()
+    assert a.done and b.done
+
+
+def test_finished_lender_prefix_survives_for_later_hits():
+    """The lender finishing (slot freed) must not invalidate the cache:
+    the blocks stay resident under the cache's reference and later
+    requests still hit and emit identical tokens."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(5))
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab_size, 24)
+    mk = lambda rid, tl: Request(                       # noqa: E731
+        rid=rid, prompt=np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, tl)]),
+        max_new_tokens=4)
+    tails = [(0, 3), (1, 7), (2, 5)]
+    base_eng = ServeEngine(cfg, params, slots=1, max_len=64,
+                           kv_impl="paged", block_len=8)
+    rng2 = np.random.default_rng(3)
+    shared2 = rng2.integers(0, cfg.vocab_size, 24)
+    base_reqs = [Request(rid=r, prompt=np.concatenate(
+        [shared2, rng2.integers(0, cfg.vocab_size, t)]), max_new_tokens=4)
+        for r, t in tails]
+    for r in base_reqs:
+        base_eng.submit(r)
+    base_eng.run()
+    eng = ServeEngine(cfg, params, slots=1, max_len=64, kv_impl="paged",
+                      block_len=8, prefix_cache=True)
+    reqs = [mk(r, t) for r, t in tails]
+    for r in reqs:                          # slots=1: strictly sequential,
+        eng.submit(r)                       # every lender frees before the
+    eng.run()                               # next request admits
+    assert [r.out for r in reqs] == [r.out for r in base_reqs]
+    assert eng.prefix.hits == 2
+
+
+def test_eviction_under_pressure_keeps_serving():
+    """A pool too small to hold the cache + a full working set forces
+    evict_until on admission; every request still completes and tokens
+    match the cache-off run."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(6))
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, 24 + t)
+               for t in (3, 5, 7, 2, 6)]   # distinct prompts: cache fills
+    mk = lambda: [Request(rid=i, prompt=p, max_new_tokens=4)  # noqa: E731
+                  for i, p in enumerate(prompts)]
+    # 13 allocatable blocks; each request needs 4 (32 positions / 8)
+    _, base = _serve(cfg, params, mk(), slots=2, block_len=8,
+                     num_blocks=14)
+    eng, got = _serve(cfg, params, mk(), slots=2, block_len=8,
+                      num_blocks=14, prefix_cache=True)
+    assert got == base
+    assert eng.prefix.evicted_blocks >= 1   # pressure actually evicted
+
+
+def test_prefix_metrics_emitted():
+    """prefix.hit_tokens / kv.pool.blocks_saved / prefix.blocks_shared
+    and engine.prefill.tokens land in the attached registry, and the
+    prefill-token count actually collapses on the warm cache."""
+    from repro import obs as obs_lib
+
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    runs = {}
+    for on in (False, True):
+        obs = obs_lib.Observability()
+        eng, _ = _serve(cfg, params, _mk_reqs(cfg), prefix_cache=on,
+                        obs=obs)
+        snap = {k: obs.metrics.get(k).value
+                for k in ("engine.prefill.tokens", "prefix.hit_tokens",
+                          "kv.pool.blocks_saved")}
+        runs[on] = snap
+    assert runs[False]["prefix.hit_tokens"] == 0
+    assert runs[True]["prefix.hit_tokens"] >= 16
+    assert runs[True]["kv.pool.blocks_saved"] >= 1
+    assert (runs[True]["engine.prefill.tokens"]
+            < runs[False]["engine.prefill.tokens"])

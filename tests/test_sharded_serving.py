@@ -217,6 +217,68 @@ def test_tokens_bit_identical_per_tp(arch, kv_impl, pai, chunk):
         assert got == base, f"tp={tp} tokens diverged from tp=1"
 
 
+def _serve_shared_prefix(cfg, params, *, tp, pai, prefix):
+    """Six requests sharing a 3-block system prompt (greedy + seeded
+    sampling mixed); with 3 slots the second wave admits after the first
+    completes, so cache-on runs always exercise radix hits."""
+    eng = ServeEngine(cfg, params, slots=3, max_len=64, seed=0,
+                      kv_impl="paged", block_len=8, paged_attend_impl=pai,
+                      prefix_cache=prefix, tp=tp)
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 13))).astype(np.int32)
+        samp = (SamplingParams(greedy=True) if i % 2 == 0
+                else SamplingParams(temperature=0.7, top_k=6))
+        reqs.append(Request(rid=i,
+                            prompt=np.concatenate([sys_prompt, tail]),
+                            max_new_tokens=8, sampling=samp))
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and r.error is None for r in reqs)
+    return [r.out for r in sorted(reqs, key=lambda r: r.rid)], eng
+
+
+@multi_device
+@pytest.mark.parametrize("pai", ["gather", "pallas"])
+def test_prefix_cache_bit_identical_per_tp(pai):
+    """The refcounted pager + radix prefix cache are host-side metadata
+    with one logical block id space, so block sharing must be invisible
+    to sharding: cache-on tokens == cache-off tokens at every tp, and
+    == the unsharded cache-on run."""
+    cfg, params = _params_for("gqa")
+    base, _ = _serve_shared_prefix(cfg, params, tp=1, pai=pai,
+                                   prefix=False)
+    assert any(len(o) > 1 for o in base)
+    for tp in (1, 2, 4):
+        got, eng = _serve_shared_prefix(cfg, params, tp=tp, pai=pai,
+                                        prefix=True)
+        assert eng.prefix is not None and eng.prefix.hits >= 1, \
+            f"tp={tp}: trace never hit the radix index"
+        assert eng.prefix.hit_blocks >= 1
+        assert got == base, f"tp={tp} cache-on tokens diverged"
+
+
+@multi_device
+def test_prefix_shared_blocks_are_shard_local_slices():
+    """A shared pool block is one logical id; every shard holds a
+    head-slice of it. After a cache hit the lender's and borrower's
+    tables reference the same ids — refcounts > 1 on the shared blocks —
+    while the pool leaves stay sharded on the kv-heads dim."""
+    cfg, params = _params_for("gqa")
+    _, eng = _serve_shared_prefix(cfg, params, tp=2, pai="gather",
+                                  prefix=True)
+    assert eng.prefix.hit_blocks >= 3   # the 3-block system prompt reused
+    # every finished slot dropped its references; the survivors are
+    # exactly the radix index's blocks (>= the 3 system-prompt blocks),
+    # each held by its single cache reference
+    assert eng.pager.blocks_in_use == eng.prefix.num_blocks >= 3
+    assert eng.pager.blocks_shared == 0
+
+
 @multi_device
 def test_decode_stays_one_dispatch_per_step():
     cfg, params = _params_for("gqa")
