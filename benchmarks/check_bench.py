@@ -1,0 +1,260 @@
+"""Single source of truth for the serving-benchmark section gates.
+
+Both consumers run the SAME checker functions:
+
+- ``benchmarks/serving.py`` imports them into its internal
+  ``check_thresholds`` gate (the benchmark fails its own run), and
+- CI's belt-and-braces steps invoke this file directly against the
+  uploaded artifact::
+
+      python benchmarks/check_bench.py --bench BENCH_serving.json \\
+          --sections poisson,mixed_chunked,prefix_cache,kv_quant
+
+  so the tier-1 and nightly lanes can no longer drift from the
+  benchmark's own thresholds (they used to carry near-duplicate inline
+  ``python - <<EOF`` blocks with hand-copied constants).
+
+Every checker takes the full results dict and returns a list of
+``(metric_path, observed_value, limit)`` tuples — empty means the
+section passes; a missing section is itself a failure (a renamed
+section must not silently disable its gate). Pure stdlib on purpose:
+the CI step that runs this against an artifact must not need jax or
+numpy to be importable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+#: poisson-section keys the smoke gate requires present AND finite
+POISSON_GATED = ("ttft_ms.p50", "ttft_ms.p99", "tpot_ms.p50",
+                 "tpot_ms.p99", "goodput_tok_s")
+
+#: minimum short-request p99-TTFT improvement the chunked engine must
+#: deliver over the unchunked engine on the same mixed trace — a same-
+#: process ratio, host-speed-invariant. The workload is built to deliver
+#: a wide margin (long prefills dominate the unchunked iteration time);
+#: 2x is the contract floor, not the expectation.
+MIN_SHORT_TTFT_SPEEDUP = 2.0
+
+#: prefix-cache gate: prefill tokens computed AND pool peak-blocks must
+#: each drop by at least this factor cache-on vs cache-off on the
+#: shared-system-prompt trace. A RATIO of two runs in one process, so it
+#: holds on any runner class; the observed smoke collapse is ~7x
+#: (prefill tokens) and ~2.5x (peak blocks).
+MIN_PREFIX_COLLAPSE = 2.0
+
+#: below this tok/s the serving loop is broken, not slow (shared with
+#: serving.py's absolute-throughput gate)
+FLOOR_TOK_S = 2.0
+
+#: kv_quant gate: resident pool bytes must drop by at least this factor
+#: vs the unquantized pool at the same block count. int8 lands ~3.9x
+#: (4-byte f32 -> 1-byte codes, minus the f32 scale pools); q2_14's
+#: int16 codes cap it just under 2x, so its floor is set to what the
+#: format can deliver rather than a round number.
+MIN_KVQ_BYTES_RATIO = {"int8": 2.0, "q2_14": 1.9}
+
+#: kv_quant gate: greedy-token match rate vs the unquantized engine on
+#: the same trace. Floors with wide headroom under the measured smoke
+#: numbers (int8 0.875, q2_14 1.0 on this revision's seeded trace), NOT
+#: expectations: the smoke model is random-weight (near-uniform logits,
+#: so int8's quantization noise flips far more argmaxes than it would
+#: on a trained model), and the run is seeded/deterministic, so the
+#: measured rate is stable per revision. q2_14 (the paper's format)
+#: reproduces the unquantized stream exactly even here.
+MIN_KVQ_MATCH_RATE = {"int8": 0.50, "q2_14": 0.90}
+
+
+def check_poisson(res: dict) -> list:
+    """Presence/finiteness gate for the open-loop Poisson latency
+    section: the metrics the roadmap work is steered by must exist and
+    be finite in the artifact. Latency magnitudes are host-dependent,
+    so magnitudes are deliberately not thresholded."""
+    bad = []
+    for key in POISSON_GATED + ("pool.peak_blocks",):
+        path = f"poisson.{key}"
+        node = res
+        try:
+            for part in path.split("."):
+                node = node[part]
+        except (KeyError, TypeError):
+            bad.append((path, float("nan"), "present"))
+            continue
+        try:
+            v = float(node)
+        except (TypeError, ValueError):
+            bad.append((path, float("nan"), "numeric"))
+            continue
+        if not math.isfinite(v):
+            bad.append((path, v, "finite"))
+    return bad
+
+
+def check_mixed_chunked(res: dict) -> list:
+    """The chunked-prefill gate: bit-identical tokens AND the short-
+    request p99 TTFT speedup floor. Missing section = failure."""
+    sec = res.get("mixed_chunked")
+    if not isinstance(sec, dict):
+        return [("mixed_chunked/<missing>", float("nan"), float("nan"))]
+    bad = []
+    if sec.get("tokens_identical") != 1:
+        bad.append(("mixed_chunked/tokens_identical",
+                    float(sec.get("tokens_identical", float("nan"))), 1.0))
+    spd = float(sec.get("short_ttft_p99_speedup", float("nan")))
+    if not (spd >= MIN_SHORT_TTFT_SPEEDUP):
+        bad.append(("mixed_chunked/short_ttft_p99_speedup", spd,
+                    MIN_SHORT_TTFT_SPEEDUP))
+    return bad
+
+
+def check_sharded(res: dict) -> list:
+    """Gate for the tensor-parallel section: the TP=2 engine must emit
+    bit-identical tokens to TP=1 and both throughput metrics must exist
+    and be finite. Deliberately NOT a speedup gate — forced host-CPU
+    shards time-share the same cores, so tok_s_tp2 is a topology
+    record, not a performance claim."""
+    nan = float("nan")
+    sh = res.get("sharded")
+    if not isinstance(sh, dict) or "error" in sh:
+        return [("sharded/<missing>", nan, nan)]
+    bad = []
+    if sh.get("tokens_identical") != 1:
+        bad.append(("sharded/tokens_identical",
+                    float(sh.get("tokens_identical", nan)), 1.0))
+    for key in ("tok_s_tp1", "tok_s_tp2"):
+        v = sh.get(key)
+        if not isinstance(v, (int, float)) or not math.isfinite(v) or v <= 0:
+            bad.append((f"sharded/{key}",
+                        float(v) if isinstance(v, (int, float)) else nan,
+                        0.0))
+    return bad
+
+
+def check_prefix_cache(res: dict) -> list:
+    """Gate for the prefix-cache section: bit-identical tokens cache-on
+    vs cache-off (TP=1, and TP=1/TP=2 in the sub-trace), and >=
+    MIN_PREFIX_COLLAPSE collapse of both prefill tokens and pool peak
+    blocks. Missing section = failure."""
+    nan = float("nan")
+    sec = res.get("prefix_cache")
+    if not isinstance(sec, dict):
+        return [("prefix_cache/<missing>", nan, nan)]
+    bad = []
+    if sec.get("tokens_identical") != 1:
+        bad.append(("prefix_cache/tokens_identical",
+                    float(sec.get("tokens_identical", nan)), 1.0))
+    for key in ("prefill_tokens_ratio", "peak_blocks_ratio"):
+        v = float(sec.get(key, nan))
+        if not (v >= MIN_PREFIX_COLLAPSE):
+            bad.append((f"prefix_cache/{key}", v, MIN_PREFIX_COLLAPSE))
+    tp = sec.get("tp")
+    if not isinstance(tp, dict) or "error" in tp:
+        bad.append(("prefix_cache/tp/<missing>", nan, nan))
+    else:
+        for key in ("tokens_identical_tp1", "tokens_identical_tp2",
+                    "tokens_identical_across_tp"):
+            if tp.get(key) != 1:
+                bad.append((f"prefix_cache/tp/{key}",
+                            float(tp.get(key, nan)), 1.0))
+    return bad
+
+
+def check_kv_quant(res: dict) -> list:
+    """Gate for the quantized paged-KV section (ROADMAP item 5): per
+    format, the resident pool must shrink by the format's bytes-ratio
+    floor at matched block count, the greedy token stream must match the
+    unquantized engine at or above the stored rate, and the lane must
+    still serve above the broken-loop tok/s floor. The int8 stream must
+    additionally be bit-identical between the gather and pallas attends
+    (dequantization is the same CORDIC multiply either side of the
+    kernel boundary) and across TP=1/TP=2 (scales shard with the
+    kv-heads cut, so the mesh must not perturb a single token)."""
+    nan = float("nan")
+    sec = res.get("kv_quant")
+    if not isinstance(sec, dict):
+        return [("kv_quant/<missing>", nan, nan)]
+    bad = []
+    fmts = sec.get("formats")
+    if not isinstance(fmts, dict):
+        return [("kv_quant/formats/<missing>", nan, nan)]
+    for fmt in sorted(MIN_KVQ_MATCH_RATE):
+        f = fmts.get(fmt)
+        if not isinstance(f, dict):
+            bad.append((f"kv_quant/formats/{fmt}/<missing>", nan, nan))
+            continue
+        rate = float(f.get("match_rate", nan))
+        if not (rate >= MIN_KVQ_MATCH_RATE[fmt]):
+            bad.append((f"kv_quant/{fmt}/match_rate", rate,
+                        MIN_KVQ_MATCH_RATE[fmt]))
+        ratio = float(f.get("pool_bytes_ratio", nan))
+        if not (ratio >= MIN_KVQ_BYTES_RATIO[fmt]):
+            bad.append((f"kv_quant/{fmt}/pool_bytes_ratio", ratio,
+                        MIN_KVQ_BYTES_RATIO[fmt]))
+        tok_s = float(f.get("tok_s", nan))
+        if not (tok_s >= FLOOR_TOK_S):
+            bad.append((f"kv_quant/{fmt}/tok_s", tok_s, FLOOR_TOK_S))
+    if sec.get("pallas_tokens_identical") != 1:
+        bad.append(("kv_quant/pallas_tokens_identical",
+                    float(sec.get("pallas_tokens_identical", nan)), 1.0))
+    tp = sec.get("tp")
+    if not isinstance(tp, dict) or "error" in tp:
+        bad.append(("kv_quant/tp/<missing>", nan, nan))
+    elif tp.get("tokens_identical_across_tp") != 1:
+        bad.append(("kv_quant/tp/tokens_identical_across_tp",
+                    float(tp.get("tokens_identical_across_tp", nan)), 1.0))
+    return bad
+
+
+#: --sections name -> checker; serving.py's check_thresholds runs the
+#: same functions, so adding a section here gates it in BOTH consumers
+SECTION_CHECKS = {
+    "poisson": check_poisson,
+    "mixed_chunked": check_mixed_chunked,
+    "sharded": check_sharded,
+    "prefix_cache": check_prefix_cache,
+    "kv_quant": check_kv_quant,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate recorded serving-benchmark sections (the same "
+                    "checkers serving.py runs internally).")
+    ap.add_argument("--bench", required=True,
+                    help="path to a BENCH_serving*.json artifact")
+    ap.add_argument("--sections", required=True,
+                    help="comma-separated subset of: "
+                         + ", ".join(sorted(SECTION_CHECKS)))
+    args = ap.parse_args(argv)
+
+    sections = [s.strip() for s in args.sections.split(",") if s.strip()]
+    unknown = [s for s in sections if s not in SECTION_CHECKS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; "
+                 f"known: {sorted(SECTION_CHECKS)}")
+
+    with open(args.bench) as f:
+        res = json.load(f)
+
+    failures = []
+    for s in sections:
+        bad = SECTION_CHECKS[s](res)
+        status = "OK" if not bad else f"FAIL ({len(bad)})"
+        print(f"[check_bench] {s}: {status}")
+        failures.extend(bad)
+    if failures:
+        for name, value, limit in failures:
+            lim = limit if isinstance(limit, str) else f"{limit:.6g}"
+            print(f"BENCH GATE FAILED: {name} = {value:.6g} (limit {lim})",
+                  file=sys.stderr)
+        return 1
+    print(f"[check_bench] all {len(sections)} section(s) passed "
+          f"({args.bench})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

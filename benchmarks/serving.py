@@ -83,6 +83,21 @@ benchmarks/latency.py evaluator microbench lives here too, see run()):
     bit-identical under tensor parallelism — block sharing is
     host-side metadata, so the mesh must not see it.
 
+``kv_quant``
+    The quantized paged-KV acceptance trace (ROADMAP item 5): one
+    seeded greedy request trace served from the unquantized f32 pool
+    and from int8 / q2_14 block-scaled pools (K/V quantized at
+    pool-write time against per-block-per-head scales, dequantized at
+    every read via the CORDIC linear-rotation multiply —
+    core/kv_quant.py). Gated per format on the resident-pool bytes
+    collapse at matched block count (int8 >= 2x), the greedy token
+    match rate vs the unquantized stream, and the tok/s floor; int8
+    must additionally be bit-identical between the gather and pallas
+    attends (the kernel dequantizes per-chunk in VMEM with the same
+    CORDIC multiply) and across TP=1/TP=2 (scale pools shard on the
+    kv-heads cut). All gates live in benchmarks/check_bench.py — the
+    same checkers CI runs against the uploaded artifact.
+
 ``host_overhead_1slot``
     The per-step phase breakdown (admit / dispatch / host_sync /
     sample_copy mean ms) per impl at 1 slot — quantifying the carried
@@ -110,14 +125,24 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
+# the section gates live in benchmarks/check_bench.py (one source of
+# truth shared with the CI belt-check step); make the import work from
+# any cwd, not just repo root
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import jax
 import numpy as np
 
+from check_bench import (FLOOR_TOK_S, MIN_KVQ_BYTES_RATIO,
+                         MIN_KVQ_MATCH_RATE, MIN_PREFIX_COLLAPSE,
+                         MIN_SHORT_TTFT_SPEEDUP, check_kv_quant,
+                         check_mixed_chunked, check_poisson,
+                         check_prefix_cache, check_sharded)
 from repro import obs as obs_lib
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
@@ -164,7 +189,8 @@ TOLERANCE = 0.9         # absolute tok/s soaks up runner-class differences
                         # compile-in-measurement, quadratic gathers — are
                         # >20x, and serialization is caught host-invariantly
                         # by the speedup-ratio gate below
-FLOOR_TOK_S = 2.0       # below this the serving loop is broken, not slow
+#: (FLOOR_TOK_S — below which the serving loop is broken, not slow —
+#: is imported from check_bench.py, shared with the kv_quant gate)
 #: 8 slots must beat 1 slot by at least this factor per impl — a RATIO, so
 #: it holds on any host speed. One decode dispatch per step buys ~3.5-4x
 #: here; a relapse to per-slot dispatch (or a paged gather going quadratic
@@ -174,12 +200,9 @@ MIN_SPEEDUP_8_OVER_1 = 1.5
 #: kernel's scaling reflects interpreter overhead (grid size grows with
 #: slots), so its gates are the tok/s floor + the transient invariance.
 SPEEDUP_IMPLS = ("dense", "paged")
-#: prefix-cache gate: prefill tokens computed AND pool peak-blocks must
-#: each drop by at least this factor cache-on vs cache-off on the
-#: shared-system-prompt trace. A RATIO of two runs in one process, so it
-#: holds on any runner class; the observed smoke collapse is ~7x
-#: (prefill tokens) and ~2.5x (peak blocks).
-MIN_PREFIX_COLLAPSE = 2.0
+#: (MIN_PREFIX_COLLAPSE, MIN_SHORT_TTFT_SPEEDUP, MIN_KVQ_* and the
+#: section checkers themselves live in check_bench.py — the single
+#: source of truth CI's belt-check step also runs)
 
 
 def _cfg(smoke: bool) -> ModelConfig:
@@ -296,10 +319,8 @@ def bench(cfg, params, smoke: bool) -> dict:
 
 
 #: engine phases whose per-step means the host-overhead section records
+#: (the poisson-section gated-key list is check_bench.POISSON_GATED)
 PHASES = ("admit", "dispatch", "host_sync", "sample_copy")
-#: poisson-section keys the smoke gate requires present AND finite
-POISSON_GATED = ("ttft_ms.p50", "ttft_ms.p99", "tpot_ms.p50",
-                 "tpot_ms.p99", "goodput_tok_s")
 
 
 def _poisson_params(smoke: bool) -> dict:
@@ -389,14 +410,6 @@ def bench_poisson(cfg, params, smoke: bool, trace_out=None,
         ob.metrics.to_json(metrics_json)
         print(f"[serving] wrote metrics snapshot -> {metrics_json}")
     return res
-
-
-#: minimum short-request p99-TTFT improvement the chunked engine must
-#: deliver over the unchunked engine on the same mixed trace — a same-
-#: process ratio, host-speed-invariant. The workload is built to deliver
-#: a wide margin (long prefills dominate the unchunked iteration time);
-#: 2x is the contract floor, not the expectation.
-MIN_SHORT_TTFT_SPEEDUP = 2.0
 
 
 def _mixed_trace(cfg, smoke: bool):
@@ -504,23 +517,6 @@ def bench_mixed_chunked(cfg, params, smoke: bool) -> dict:
           f"(x{res['short_ttft_p99_speedup']}), tokens identical: "
           f"{bool(res['tokens_identical'])}")
     return res
-
-
-def check_mixed_chunked(res: dict) -> list:
-    """The chunked-prefill gate: bit-identical tokens AND the short-
-    request p99 TTFT speedup floor. Missing section = failure."""
-    sec = res.get("mixed_chunked")
-    if not isinstance(sec, dict):
-        return [("mixed_chunked/<missing>", float("nan"), float("nan"))]
-    bad = []
-    if sec.get("tokens_identical") != 1:
-        bad.append(("mixed_chunked/tokens_identical",
-                    float(sec.get("tokens_identical", float("nan"))), 1.0))
-    spd = float(sec.get("short_ttft_p99_speedup", float("nan")))
-    if not (spd >= MIN_SHORT_TTFT_SPEEDUP):
-        bad.append(("mixed_chunked/short_ttft_p99_speedup", spd,
-                    MIN_SHORT_TTFT_SPEEDUP))
-    return bad
 
 
 def bench_host_overhead(cfg, params, smoke: bool) -> dict:
@@ -654,28 +650,6 @@ def bench_sharded(smoke: bool) -> dict:
 
 #: stdout marker the --sharded-subprocess child prints its JSON after
 _SHARDED_MARKER = "SHARDED_JSON:"
-
-
-def check_sharded(res: dict) -> list:
-    """Gate for the tensor-parallel section: the TP=2 engine must emit
-    bit-identical tokens to TP=1 and both throughput metrics must exist
-    and be finite. Deliberately NOT a speedup gate (see
-    _bench_sharded_inner)."""
-    nan = float("nan")
-    sh = res.get("sharded")
-    if not isinstance(sh, dict) or "error" in sh:
-        return [("sharded/<missing>", nan, nan)]
-    bad = []
-    if sh.get("tokens_identical") != 1:
-        bad.append(("sharded/tokens_identical",
-                    float(sh.get("tokens_identical", nan)), 1.0))
-    for key in ("tok_s_tp1", "tok_s_tp2"):
-        v = sh.get(key)
-        if not isinstance(v, (int, float)) or not np.isfinite(v) or v <= 0:
-            bad.append((f"sharded/{key}",
-                        float(v) if isinstance(v, (int, float)) else nan,
-                        0.0))
-    return bad
 
 
 def _prefix_trace(cfg, n_users: int, rate_req_s: float, seed: int = 21):
@@ -841,41 +815,135 @@ def bench_prefix_cache(cfg, params, smoke: bool) -> dict:
     return res
 
 
-def check_prefix_cache(res: dict) -> list:
-    """Gate for the prefix-cache section: bit-identical tokens cache-on
-    vs cache-off (TP=1, and TP=1/TP=2 in the sub-trace), and >=
-    MIN_PREFIX_COLLAPSE collapse of both prefill tokens and pool peak
-    blocks. Missing section = failure."""
-    nan = float("nan")
-    sec = res.get("prefix_cache")
-    if not isinstance(sec, dict):
-        return [("prefix_cache/<missing>", nan, nan)]
-    bad = []
-    if sec.get("tokens_identical") != 1:
-        bad.append(("prefix_cache/tokens_identical",
-                    float(sec.get("tokens_identical", nan)), 1.0))
-    for key in ("prefill_tokens_ratio", "peak_blocks_ratio"):
-        v = float(sec.get(key, nan))
-        if not (v >= MIN_PREFIX_COLLAPSE):
-            bad.append((f"prefix_cache/{key}", v, MIN_PREFIX_COLLAPSE))
-    tp = sec.get("tp")
-    if not isinstance(tp, dict) or "error" in tp:
-        bad.append(("prefix_cache/tp/<missing>", nan, nan))
-    else:
-        for key in ("tokens_identical_tp1", "tokens_identical_tp2",
-                    "tokens_identical_across_tp"):
-            if tp.get(key) != 1:
-                bad.append((f"prefix_cache/tp/{key}",
-                            float(tp.get(key, nan)), 1.0))
-    return bad
+#: stdout marker the --kvq-subprocess child prints its JSON after
+_KVQ_MARKER = "KVQ_TP_JSON:"
+
+
+def _kvq_serve(cfg, params, max_new: int, *, kv_quant, attend_impl="gather",
+               tp=None):
+    """One warmed serve of the fixed kv_quant request trace. Returns
+    (sorted token streams, tok/s, resident pool bytes). Every call
+    serves the identical seeded requests, so streams are comparable
+    across storage formats, attend impls, and TP degrees."""
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, seed=0,
+                      sampling=SamplingParams(greedy=True), kv_impl="paged",
+                      paged_attend_impl=attend_impl, kv_quant=kv_quant,
+                      tp=tp)
+    _serve_once(eng, cfg, requests_per_slot=1, max_new=2)   # warm compiles
+    reqs = _requests(cfg, 8, max_new)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    while eng.step():
+        pass
+    wall = time.perf_counter() - t0
+    toks = [list(map(int, r.out))
+            for r in sorted(reqs, key=lambda r: r.rid)]
+    n_tok = sum(len(t) for t in toks)
+    return toks, round(n_tok / wall, 2), eng.kv_pool_bytes(), eng
+
+
+def _bench_kvq_tp_inner(smoke: bool) -> dict:
+    """int8 token identity at TP=1 vs TP=2 on the kv_quant trace. Must
+    run with >= 2 visible devices (bench_kv_quant arranges that). The
+    per-block-per-head scale pools shard on the same kv-heads cut as the
+    code pools, so the mesh must not perturb a single emitted token."""
+    cfg = _cfg(smoke)
+    params = tf.init(cfg, jax.random.PRNGKey(0))
+    max_new = 8 if smoke else 16
+    toks = {tp: _kvq_serve(cfg, params, max_new, kv_quant="int8", tp=tp)[0]
+            for tp in (1, 2)}
+    out = {
+        "device_count": jax.device_count(),
+        "tokens_identical_across_tp": int(toks[1] == toks[2]),
+    }
+    print(f"[serving] kv_quant tp: int8 identical across tp1/tp2 = "
+          f"{out['tokens_identical_across_tp']}")
+    return out
+
+
+def bench_kv_quant(cfg, params, smoke: bool) -> dict:
+    """Quantized paged-KV acceptance section (ROADMAP item 5): the same
+    seeded greedy trace served from an unquantized paged pool and from
+    int8 / q2_14 block-scaled pools (quantize-at-write, CORDIC linear-
+    rotation dequant at every read). Records, per format: the greedy
+    token match rate vs the unquantized stream, resident pool bytes and
+    the bytes collapse ratio at MATCHED block count, bytes/token, and
+    tok/s. int8 additionally runs the pallas attend (in-kernel dequant
+    must be bit-identical to the gather dequant) and a TP=1/TP=2
+    identity sub-trace (subprocess re-exec with two forced host devices
+    when needed, like ``sharded``). Gated by check_bench.check_kv_quant."""
+    max_new = 8 if smoke else 16
+    base_toks, base_tok_s, base_bytes, base_eng = _kvq_serve(
+        cfg, params, max_new, kv_quant="none")
+    total = sum(len(t) for t in base_toks)
+    res = {
+        "max_new": max_new,
+        "n_requests": len(base_toks),
+        "baseline": {"tok_s": base_tok_s, "pool_bytes": int(base_bytes),
+                     "bytes_per_token": round(
+                         base_eng.pager.block_bytes / base_eng.block_len, 2)},
+        "formats": {},
+    }
+    toks_i8 = None
+    for fmt in ("int8", "q2_14"):
+        toks, tok_s, pool_bytes, eng = _kvq_serve(cfg, params, max_new,
+                                                  kv_quant=fmt)
+        if fmt == "int8":
+            toks_i8 = toks
+        matched = sum(a == b for s1, s2 in zip(base_toks, toks)
+                      for a, b in zip(s1, s2))
+        spec = eng._kv_quant_spec
+        res["formats"][fmt] = {
+            "match_rate": round(matched / max(1, total), 4),
+            "matched_tokens": matched,
+            "total_tokens": total,
+            "tok_s": tok_s,
+            "pool_bytes": int(pool_bytes),
+            "pool_bytes_ratio": round(base_bytes / pool_bytes, 3),
+            "bytes_per_token": round(
+                eng.pager.block_bytes / eng.block_len, 2),
+            "code_bits": spec.code_bits,
+        }
+        print(f"[serving] kv_quant {fmt}: match {matched}/{total} = "
+              f"{res['formats'][fmt]['match_rate']}, pool bytes x"
+              f"{res['formats'][fmt]['pool_bytes_ratio']} down, "
+              f"{tok_s} tok/s")
+    toks_pl, _, _, _ = _kvq_serve(cfg, params, max_new, kv_quant="int8",
+                                  attend_impl="pallas")
+    res["pallas_tokens_identical"] = int(toks_pl == toks_i8)
+    print(f"[serving] kv_quant: int8 gather == int8 pallas: "
+          f"{bool(res['pallas_tokens_identical'])}")
+    if jax.device_count() >= 2:
+        res["tp"] = _bench_kvq_tp_inner(smoke)
+        return res
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2").strip()
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    cmd = [sys.executable, os.path.abspath(__file__), "--kvq-subprocess"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=root)
+    for line in proc.stdout.splitlines():
+        if line.startswith(_KVQ_MARKER):
+            res["tp"] = json.loads(line[len(_KVQ_MARKER):])
+            return res
+    res["tp"] = {"error": "kv_quant tp subprocess produced no result: "
+                          + (proc.stderr or proc.stdout)[-500:]}
+    return res
 
 
 def check_obs_sections(res: dict) -> list:
     """Presence/finiteness gate for the observability-driven sections —
     missing = failure, matching the tok/s gate's missing-metric rule.
     Latency magnitudes are host-dependent, so only existence + finiteness
-    are enforced here."""
-    bad = []
+    are enforced here. The poisson half is check_bench.check_poisson
+    (shared with the CI belt-check); host-overhead and saturation shapes
+    are benchmark-internal, so they stay here."""
+    bad = list(check_poisson(res))
 
     def _finite(path: str) -> None:
         node = res
@@ -893,9 +961,6 @@ def check_obs_sections(res: dict) -> list:
         if not np.isfinite(v):
             bad.append((path, v, "finite"))
 
-    for key in POISSON_GATED:
-        _finite(f"poisson.{key}")
-    _finite("poisson.pool.peak_blocks")
     for impl in IMPL_KEYS:
         for ph in PHASES:
             _finite(f"host_overhead_1slot.{impl}.{ph}_ms_mean")
@@ -933,6 +998,7 @@ def check_thresholds(res: dict) -> list:
     bad.extend(check_mixed_chunked(res))
     bad.extend(check_sharded(res))
     bad.extend(check_prefix_cache(res))
+    bad.extend(check_kv_quant(res))
     return bad
 
 
@@ -1025,6 +1091,8 @@ def main(argv=None) -> int:
                     help=argparse.SUPPRESS)  # internal: bench_sharded child
     ap.add_argument("--prefix-subprocess", action="store_true",
                     help=argparse.SUPPRESS)  # internal: prefix tp child
+    ap.add_argument("--kvq-subprocess", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: kv_quant tp child
     args = ap.parse_args(argv)
 
     if args.sharded_subprocess:
@@ -1032,6 +1100,9 @@ def main(argv=None) -> int:
         return 0
     if args.prefix_subprocess:
         print(_PREFIX_MARKER + json.dumps(_bench_prefix_tp_inner(args.smoke)))
+        return 0
+    if args.kvq_subprocess:
+        print(_KVQ_MARKER + json.dumps(_bench_kvq_tp_inner(args.smoke)))
         return 0
 
     cfg = _cfg(args.smoke)
@@ -1044,6 +1115,9 @@ def main(argv=None) -> int:
         # row per slot, no model-axis mesh
         "tp": 1,
         "axis_sizes": {"data": jax.device_count(), "model": 1},
+        # ...and an unquantized f32 pool; the quantized-KV plane is
+        # measured (and gated) in the dedicated kv_quant section below
+        "kv_quant": "none",
     }
     res["poisson"] = bench_poisson(cfg, params, args.smoke,
                                    trace_out=args.trace_out,
@@ -1053,6 +1127,7 @@ def main(argv=None) -> int:
     res["saturation"] = bench_saturation(cfg, params)
     res["sharded"] = bench_sharded(args.smoke)
     res["prefix_cache"] = bench_prefix_cache(cfg, params, args.smoke)
+    res["kv_quant"] = bench_kv_quant(cfg, params, args.smoke)
     if args.evaluators or not args.smoke:
         rows: list = []
         run(rows, n=1 << 16 if args.smoke else 1_000_000,

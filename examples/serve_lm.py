@@ -78,6 +78,13 @@ def main():
                          "'pallas' walks live blocks in place with the "
                          "paged-attention kernel (O(block-len) transient, "
                          "same tokens). Requires --kv-impl paged")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "q2_14"],
+                    help="paged-pool storage format: K/V quantized at "
+                         "pool-write time, dequantized at every read via "
+                         "the CORDIC linear-rotation multiply (int8 ~4x / "
+                         "q2_14 ~2x fewer resident pool bytes). Requires "
+                         "--kv-impl paged")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: prompts longer than this stream "
                          "in as block-aligned chunks interleaved with "
@@ -118,7 +125,8 @@ def main():
     )
     print(f"[serve_lm] model {cfg.param_counts()['total'] / 1e6:.1f}M params, "
           f"act_impl={cfg.act_impl}, slots={args.slots}, "
-          f"kv_impl={args.kv_impl}, T={args.temperature}, top_k={args.top_k}")
+          f"kv_impl={args.kv_impl}, kv_quant={args.kv_quant}, "
+          f"T={args.temperature}, top_k={args.top_k}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
 
     # temperature <= 0 resolves to greedy inside SamplingParams
@@ -129,6 +137,7 @@ def main():
                       sampling=sampling, seed=args.seed,
                       kv_impl=args.kv_impl, block_len=args.block_len,
                       paged_attend_impl=args.paged_attend_impl,
+                      kv_quant=args.kv_quant,
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,

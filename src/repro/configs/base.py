@@ -96,6 +96,16 @@ class ModelConfig:
                                          # Pallas kernel (O(block_len) VMEM
                                          # transient per step, token-identical;
                                          # kernels/paged_attention.py)
+    kv_quant: str = "none"               # none | int8 | q2_14: paged-pool
+                                         # storage format (core/kv_quant.py) —
+                                         # K/V quantized at pool-write time
+                                         # against per-block-per-head amax
+                                         # scales, dequantized at every read
+                                         # (gather attend and inside the
+                                         # Pallas kernel's per-chunk VMEM
+                                         # step) via the CORDIC linear-
+                                         # rotation multiply. Requires
+                                         # kv_impl="paged"; GQA only
     moe: Optional[MoEConfig] = None
     mla: Optional[MLAConfig] = None
     ssm: Optional[SSMConfig] = None

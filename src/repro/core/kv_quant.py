@@ -1,0 +1,135 @@
+"""Quantized paged-KV formats: per-block scaled fixed-point storage with a
+CORDIC linear-rotation dequant.
+
+The serve engine's paged KV pool is the single largest memory consumer, and
+the paper's thesis — a narrow fixed-point datapath serves nonlinear math at
+full accuracy when formats are assigned per-op with explicit saturation
+handling — applies to it directly. ``cfg.kv_quant`` selects the storage
+format of the K/V block pools:
+
+    "none"  — full-width pools (the pre-quantization plane, byte-for-byte)
+    "int8"  — Q8.0 codes in int8 lanes: 4x fewer pool bytes than f32
+    "q2_14" — the paper's 16-bit Q2.14 format in int16 lanes: 2x fewer
+
+Quantization is *block-scaled*: every pool block carries one f32 scale per
+kv head (shape ``(num_blocks, 1, KH, 1)``, broadcastable against the
+``(num_blocks, block_len, KH, hd)`` code pool), chosen from the block's
+per-head amax so in-range writes never clip — saturation can only come from
+an explicitly chosen scale, and `fixed_point.quantize` counts it when it
+does (the ``fixed_point.saturation.clips{fmt=...}`` telemetry). Scales are
+per-head so the tensor-parallel kv-heads cut shards them with the pools:
+each shard computes exactly the scales the unsharded engine would, which is
+what keeps TP=1/TP=2 token streams bit-identical under quantization.
+
+Dequantization is the CORDIC **linear-rotation multiply**
+(cordic_engine.functions.multiply_float): code * resolution gives the
+block-relative value, and the scale multiply runs as a frexp-reduced
+shift-add sweep — the same transcendental-free datapath as the rest of the
+pipeline, elementwise and deterministic, so the gather attend, the Pallas
+block-walking kernel, and every TP shard dequantize to bit-identical
+floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixed_point as fp
+from repro.cordic_engine import functions as fn
+
+#: cfg.kv_quant values the engine accepts.
+KV_QUANT_IMPLS = ("none", "int8", "q2_14")
+
+#: int8 KV codes: 1 sign bit + 7 integer bits, no fraction — the scale
+#: carries all the dynamic range (prints as "Q8.0" in saturation metrics).
+INT8 = fp.QFormat(total_bits=8, frac_bits=0)
+
+#: positive floor for amax-derived scales: an all-zero block quantizes to
+#: all-zero codes instead of dividing by zero.
+_TINY = np.float32(np.finfo(np.float32).tiny)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """One quantized-KV storage format: the Q format the codes live in and
+    the integer lane dtype the pool stores them as."""
+
+    name: str
+    fmt: fp.QFormat
+    code_dtype: Any
+
+    @property
+    def fmt_max(self) -> float:
+        """Largest representable magnitude of the format (code max_int in
+        value units); amax-derived scales map a block's amax here."""
+        return self.fmt.max_int * self.fmt.resolution
+
+    @property
+    def code_bits(self) -> int:
+        """Storage bits per pool element (the lane width, not fmt bits)."""
+        return jnp.dtype(self.code_dtype).itemsize * 8
+
+
+_SPECS = {
+    "int8": KVQuantSpec("int8", INT8, jnp.int8),
+    "q2_14": KVQuantSpec("q2_14", fp.Q2_14, jnp.int16),
+}
+
+
+def spec_for(name: Optional[str]) -> Optional[KVQuantSpec]:
+    """The KVQuantSpec for a cfg.kv_quant value; None for "none"/None.
+
+    Unknown names raise at init time (the engine calls this before any
+    pool is built) rather than silently serving unquantized.
+    """
+    if name is None or name == "none":
+        return None
+    spec = _SPECS.get(name)
+    if spec is None:
+        raise ValueError(f"unknown kv_quant {name!r}; expected one of "
+                         f"{KV_QUANT_IMPLS}")
+    return spec
+
+
+def scale_for_amax(amax: jax.Array, spec: KVQuantSpec) -> jax.Array:
+    """amax -> f32 scale mapping the amax onto the format's max code
+    (floored at tiny so all-zero inputs stay divisible)."""
+    return jnp.maximum(amax.astype(jnp.float32) / np.float32(spec.fmt_max),
+                       _TINY)
+
+
+def block_scale(x: jax.Array, spec: KVQuantSpec) -> jax.Array:
+    """Per-block-per-head scale for ``(..., L, KH, hd)`` blocks: amax over
+    the position and feature axes, head axis kept — returns
+    ``(..., 1, KH, 1)`` f32, broadcastable against the block."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1),
+                   keepdims=True)
+    return scale_for_amax(amax, spec)
+
+
+def quantize(x: jax.Array, spec: KVQuantSpec, scale: jax.Array) -> jax.Array:
+    """float K/V -> integer codes in the spec's lane dtype.
+
+    Runs through fixed_point.quantize, so eager calls feed the saturation
+    observer (``fixed_point.saturation.clips{fmt=...}``) when a value
+    exceeds ``scale * fmt_max`` — with amax-derived scales that never
+    happens; an explicitly pinned scale makes clipping a measured metric.
+    """
+    return fp.quantize(x / scale, spec.fmt).astype(spec.code_dtype)
+
+
+def dequantize(codes: jax.Array, spec: KVQuantSpec,
+               scale: jax.Array) -> jax.Array:
+    """Integer codes + scale -> f32, the scale multiply on the CORDIC
+    linear-rotation datapath (shift-add sweep over frexp mantissas).
+
+    Elementwise and deterministic: the gather attend, the Pallas kernel's
+    per-chunk VMEM step, and every TP shard call this on identical
+    (code, scale) pairs and get bit-identical floats back.
+    """
+    return fn.multiply_float(fp.dequantize(codes, spec.fmt),
+                             jnp.asarray(scale, jnp.float32))

@@ -159,9 +159,12 @@ def serve_param_shardings(cfg, params, mesh: Mesh):
 
 
 #: cache-tree leaf names whose dim -2 is the kv-head axis (dense stacked
-#: (slots,1,S,KH,hd), per-slot (1,S,KH,hd), and paged pools (N,L,KH,hd) —
-#: with or without a leading stacked-layer axis, -2 is always KH).
-_KV_HEAD_LEAVES = ("k", "v", "k_pool", "v_pool")
+#: (slots,1,S,KH,hd), per-slot (1,S,KH,hd), paged pools (N,L,KH,hd), and
+#: the quantized pools' per-block scale tensors (N,1,KH,1) — with or
+#: without a leading stacked-layer axis, -2 is always KH, so the scale
+#: shards travel with the head slice whose codes they dequantize).
+_KV_HEAD_LEAVES = ("k", "v", "k_pool", "v_pool",
+                   "k_scale_pool", "v_scale_pool")
 
 
 def kv_cache_shardings(cache, mesh: Mesh, rules=DEFAULT_RULES):

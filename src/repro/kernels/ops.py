@@ -175,18 +175,25 @@ def _log_softmax_jvp(axis, sched, cfg, primals, tangents):
 
 def paged_attend_gqa(q, k_pool, v_pool, tables, k_len, *, scale,
                      softmax_impl: str = "exact", kv_dtype=None,
+                     kv_quant: str = "none",
+                     k_scale_pool=None, v_scale_pool=None,
                      sched=PAPER_SCHEDULE, cfg=PAPER_FIXED) -> jax.Array:
     """Block-walking paged GQA decode attend (kernels/paged_attention.py).
 
     Walks each row's live KV blocks through its block table — one block
     in VMEM per grid step, online softmax in f32 scratch — instead of
     gathering the full (max_len)-sized buffer.  Selected by
-    ``cfg.paged_attend_impl="pallas"`` in models.attention.
+    ``cfg.paged_attend_impl="pallas"`` in models.attention.  With
+    ``kv_quant`` set, the pools hold integer codes and the per-block
+    scale pools ride along: each block dequantizes in VMEM via the
+    CORDIC linear-rotation multiply (core/kv_quant.py).
     """
     from repro.kernels import paged_attention as PA
 
     return PA.gqa_decode(q, k_pool, v_pool, tables, k_len, scale=scale,
                          softmax_impl=softmax_impl, kv_dtype=kv_dtype,
+                         kv_quant=kv_quant, k_scale_pool=k_scale_pool,
+                         v_scale_pool=v_scale_pool,
                          sched=sched, cfg=cfg, interpret=_use_interpret())
 
 

@@ -108,6 +108,34 @@ def _num_passes(impl: str) -> int:
     raise ValueError(f"unknown softmax_impl {impl!r}")
 
 
+def canonical_kv_dtype(kv_dtype):
+    """Validate + canonicalize the ``kv_dtype`` cast seam (None passes
+    through; the caller substitutes its pool-derived default).
+
+    kv_dtype is the storage-rounding cast the gather path applies to K/V
+    before scoring (x.dtype in models.attention); the kernels replay it
+    per block so both paths attend identically-rounded values. It must be
+    a *float* dtype — an unrecognized string or an integer dtype used to
+    fall through silently and attend garbage-rounded scores; now it fails
+    at call/init time, mirroring the _paged_attend_impl validation.
+    Integer pool *storage* is selected with ``kv_quant``, not kv_dtype.
+    """
+    if kv_dtype is None:
+        return None
+    try:
+        dt = jnp.dtype(kv_dtype)
+    except TypeError:
+        raise ValueError(
+            f"unknown kv_dtype {kv_dtype!r}; expected a float dtype such "
+            "as jnp.float32 / jnp.bfloat16") from None
+    if not jnp.issubdtype(dt, jnp.floating):
+        raise ValueError(
+            f"kv_dtype {dt} is not a float dtype — kv_dtype is the "
+            "storage-rounding cast applied to K/V before scoring; select "
+            "integer pool storage with kv_quant instead")
+    return dt
+
+
 def _exp_codes(u, sched: MRSchedule, cfg: FixedConfig):
     """The exp stage of softmax_cordic's _softmax_kernel: dyadic reduction
     u = k ln2 + r and the Q-format cosh+sinh rotation. Returns the e^r
@@ -209,9 +237,14 @@ def _pass_update(s, v, pass_idx, impl, sched, cfg, m_sc, l_sc, acc_sc,
 # ---------------------------------------------------------------------------
 # GQA decode
 # ---------------------------------------------------------------------------
-def _gqa_kernel(tbl_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
-                m_sc, l_sc, acc_sc, *, block_len: int, scale: float,
-                impl: str, sched: MRSchedule, cfg: FixedConfig, kv_dtype):
+def _gqa_kernel(tbl_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
+                block_len: int, scale: float, impl: str, sched: MRSchedule,
+                cfg: FixedConfig, kv_dtype, kv_quant_spec=None):
+    # quantized pools add two scale refs between the pools and the output
+    if kv_quant_spec is not None:
+        ks_ref, vs_ref, o_ref, m_sc, l_sc, acc_sc = rest
+    else:
+        o_ref, m_sc, l_sc, acc_sc = rest
     b, p, c = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when((p == 0) & (c == 0))
@@ -226,8 +259,20 @@ def _gqa_kernel(tbl_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(base < klen)                       # dead chunks: skip compute
     def _():
         q = q_ref[0].astype(jnp.float32)                        # (KH,G,hd)
-        k = k_ref[0].astype(kv_dtype).astype(jnp.float32)       # (L,KH,hd)
-        v = v_ref[0].astype(kv_dtype).astype(jnp.float32)
+        if kv_quant_spec is None:
+            k = k_ref[0].astype(kv_dtype).astype(jnp.float32)   # (L,KH,hd)
+            v = v_ref[0].astype(kv_dtype).astype(jnp.float32)
+        else:
+            # the kv_dtype cast seam as a real dequant stage: this block's
+            # integer codes x its per-head scale, on the CORDIC linear-
+            # rotation multiply — elementwise on exactly the (code, scale)
+            # pairs the gather oracle dequantizes, so rounding matches
+            from repro.core import kv_quant as kvq
+
+            k = kvq.dequantize(k_ref[0], kv_quant_spec,
+                               ks_ref[0]).astype(kv_dtype).astype(jnp.float32)
+            v = kvq.dequantize(v_ref[0], kv_quant_spec,
+                               vs_ref[0]).astype(kv_dtype).astype(jnp.float32)
         s = jnp.einsum("hgd,lhd->hgl", q, k,
                        preferred_element_type=jnp.float32) * scale
         pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
@@ -245,6 +290,8 @@ def _gqa_kernel(tbl_ref, kl_ref, q_ref, k_ref, v_ref, o_ref,
 
 def gqa_decode(q, k_pool, v_pool, tables, k_len, *, scale: float,
                softmax_impl: str = "exact", kv_dtype=None,
+               kv_quant: str = "none",
+               k_scale_pool=None, v_scale_pool=None,
                sched: MRSchedule = PAPER_SCHEDULE,
                cfg: FixedConfig = PAPER_FIXED,
                interpret: bool = False) -> jax.Array:
@@ -260,26 +307,58 @@ def gqa_decode(q, k_pool, v_pool, tables, k_len, *, scale: float,
              step writes its new element before attending)
     kv_dtype: storage dtype the gather path would cast K/V to (x.dtype in
              models.attention) — applied per block so both paths attend
-             identically-rounded K/V.
+             identically-rounded K/V.  Validated float (canonical_kv_dtype).
+    kv_quant: "none" | "int8" | "q2_14" (core/kv_quant.py).  When set, the
+             pools hold integer codes, ``k_scale_pool``/``v_scale_pool``
+             carry the (N, 1, KH, 1) f32 per-block-per-head scales, and
+             each grid step dequantizes its block in VMEM via the CORDIC
+             linear-rotation multiply before scoring.
 
     Returns (B, KH, G, hd) f32 attention outputs.
     """
+    from repro.core import kv_quant as kvq
+
     B, KH, G, hd = q.shape
     N, L = k_pool.shape[:2]
     M = tables.shape[1]
-    kv_dtype = jnp.dtype(kv_dtype if kv_dtype is not None else k_pool.dtype)
+    spec = kvq.spec_for(kv_quant)
+    if (spec is not None) != (k_scale_pool is not None
+                              and v_scale_pool is not None):
+        # checked before kv_dtype resolution: an integer pool with the
+        # scale pools but no kv_quant should name the real mismatch, not
+        # fall through to the float-kv_dtype error below
+        raise ValueError(
+            "kv_quant and the scale pools come together: kv_quant="
+            f"{kv_quant!r} with k_scale_pool "
+            f"{'set' if k_scale_pool is not None else 'missing'}")
+    kv_dtype = canonical_kv_dtype(kv_dtype)
+    if kv_dtype is None:
+        kv_dtype = (jnp.dtype(jnp.float32) if spec is not None
+                    else canonical_kv_dtype(k_pool.dtype))
+
+    in_specs = [
+        pl.BlockSpec((1, KH, G, hd),
+                     lambda b, p, c, t, kl: (b, 0, 0, 0)),
+        pl.BlockSpec((1, L, KH, hd),
+                     lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
+        pl.BlockSpec((1, L, KH, hd),
+                     lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
+    ]
+    operands = (tables, k_len, q, k_pool, v_pool)
+    if spec is not None:
+        # per-block scales ride the same table walk as their code blocks
+        in_specs += [
+            pl.BlockSpec((1, 1, KH, 1),
+                         lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
+            pl.BlockSpec((1, 1, KH, 1),
+                         lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
+        ]
+        operands += (k_scale_pool, v_scale_pool)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, _num_passes(softmax_impl), M),
-        in_specs=[
-            pl.BlockSpec((1, KH, G, hd),
-                         lambda b, p, c, t, kl: (b, 0, 0, 0)),
-            pl.BlockSpec((1, L, KH, hd),
-                         lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
-            pl.BlockSpec((1, L, KH, hd),
-                         lambda b, p, c, t, kl: (t[b, c], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, KH, G, hd),
                                lambda b, p, c, t, kl: (b, 0, 0, 0)),
         scratch_shapes=[
@@ -290,13 +369,13 @@ def gqa_decode(q, k_pool, v_pool, tables, k_len, *, scale: float,
     )
     kern = functools.partial(_gqa_kernel, block_len=L, scale=float(scale),
                              impl=softmax_impl, sched=sched, cfg=cfg,
-                             kv_dtype=kv_dtype)
+                             kv_dtype=kv_dtype, kv_quant_spec=spec)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), jnp.float32),
         interpret=interpret,
-    )(tables, k_len, q, k_pool, v_pool)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------
@@ -402,27 +481,41 @@ def mla_decode(q_eff, q_rope, c_pool, r_pool, tables, k_len, *, scale: float,
 # the wrapped region (check_rep=False: outputs are head-sharded, not
 # replicated).
 # ---------------------------------------------------------------------------
-def shard_local_gqa(attend_fn, mesh, q, k_pool, v_pool, tables, k_len):
+def shard_local_gqa(attend_fn, mesh, q, k_pool, v_pool, tables, k_len,
+                    k_scale_pool=None, v_scale_pool=None):
     """Run a GQA paged-attend callable shard-locally over mesh axis "model".
 
     attend_fn: kernels.ops.paged_attend_gqa with kwargs bound (scale /
-    softmax_impl / kv_dtype); q (B,KH,G,hd) and the pools (N,L,KH,hd)
-    arrive KH-sharded, tables/k_len replicated; output is KH-sharded.
+    softmax_impl / kv_dtype / kv_quant); q (B,KH,G,hd) and the pools
+    (N,L,KH,hd) arrive KH-sharded, tables/k_len replicated; output is
+    KH-sharded.  Quantized pools bring their (N,1,KH,1) scale pools, cut
+    on the same KH dim — each shard dequantizes with exactly the scales
+    the unsharded kernel would, so TP layouts stay token-identical.
     Caller guarantees KH % mesh.shape["model"] == 0.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PS
 
+    in_specs = [PS(None, "model", None, None),        # q (B, KH, G, hd)
+                PS(None, None, "model", None),        # k_pool (N, L, KH, hd)
+                PS(None, None, "model", None),        # v_pool
+                PS(None, None),                       # tables (B, M)
+                PS(None)]                             # k_len (B,)
+    args = (q, k_pool, v_pool, tables, k_len)
+    if k_scale_pool is not None:
+        in_specs += [PS(None, None, "model", None)] * 2  # scales (N,1,KH,1)
+        args += (k_scale_pool, v_scale_pool)
+        fn = lambda q_, kp_, vp_, t_, kl_, ks_, vs_: attend_fn(
+            q_, kp_, vp_, t_, kl_, k_scale_pool=ks_, v_scale_pool=vs_)
+    else:
+        fn = attend_fn
+
     return shard_map(
-        attend_fn, mesh=mesh,
-        in_specs=(PS(None, "model", None, None),      # q (B, KH, G, hd)
-                  PS(None, None, "model", None),      # k_pool (N, L, KH, hd)
-                  PS(None, None, "model", None),      # v_pool
-                  PS(None, None),                     # tables (B, M)
-                  PS(None)),                          # k_len (B,)
+        fn, mesh=mesh,
+        in_specs=tuple(in_specs),
         out_specs=PS(None, "model", None, None),
         check_rep=False,
-    )(q, k_pool, v_pool, tables, k_len)
+    )(*args)
 
 
 def shard_local_mla(attend_fn, mesh, q_eff, q_rope, c_pool, r_pool, tables,
@@ -459,7 +552,8 @@ def _dtype_bytes(dtype) -> int:
 
 
 def decode_transient_bytes(cfg, *, max_len: int, block_len: int,
-                           impl: str, pool_dtype=jnp.float32) -> int:
+                           impl: str, pool_dtype=jnp.float32,
+                           kv_quant: str = "none") -> int:
     """Per-row transient working set of one paged decode attend, in bytes.
 
     "gather" materializes the full table gather — two (max_len, heads,
@@ -469,9 +563,20 @@ def decode_transient_bytes(cfg, *, max_len: int, block_len: int,
     a function of ``block_len`` only.  Derived from the same shapes the
     BlockSpecs above are built from, so this metric cannot drift from the
     kernel silently.
+
+    kv_quant != "none" (GQA only): gathered/streamed K/V are integer codes
+    in the format's lane width plus per-block f32 scales, and every read
+    also materializes the dequantized f32 buffer — the transient trades a
+    narrower gather for the dequant copy; the *resident* pool is where
+    quantization wins (kv.quant.bytes_per_token).
     """
+    from repro.core import kv_quant as kvq
+
+    spec = kvq.spec_for(kv_quant)
     ib = _dtype_bytes(pool_dtype)
     if getattr(cfg, "mla", None) is not None:
+        if spec is not None:
+            raise ValueError("kv_quant applies to GQA paged pools only")
         H, R, P = cfg.num_heads, cfg.mla.kv_lora_rank, cfg.mla.qk_rope_dim
         if impl == "gather":
             return max_len * (R + P) * ib
@@ -485,11 +590,20 @@ def decode_transient_bytes(cfg, *, max_len: int, block_len: int,
 
         H, KH = _padded_heads(cfg)
         G, hd = H // KH, cfg.head_dim
+        kv_ib = _dtype_bytes(spec.code_dtype) if spec is not None else ib
+        nblk = -(-max_len // block_len)
         if impl == "gather":
-            return 2 * max_len * KH * hd * ib
+            codes = 2 * max_len * KH * hd * kv_ib
+            if spec is None:
+                return codes
+            scales = 2 * nblk * KH * 4
+            dequant = 2 * max_len * KH * hd * 4
+            return codes + scales + dequant
         if impl == "pallas":
             q = KH * G * hd * ib
-            kv = 2 * block_len * KH * hd * ib
+            kv = 2 * block_len * KH * hd * kv_ib
             scratch = (KH * G * 2 + KH * G * hd) * 4
-            return q + kv + KH * G * hd * 4 + scratch
+            extra = (2 * KH * 4 + 2 * block_len * KH * hd * 4
+                     if spec is not None else 0)
+            return q + kv + KH * G * hd * 4 + scratch + extra
     raise ValueError(f"unknown paged_attend_impl {impl!r}")

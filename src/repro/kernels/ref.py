@@ -55,7 +55,9 @@ def sigmoid_q_ref(x_q: jax.Array, sched: MRSchedule = PAPER_SCHEDULE,
 # argmax/token decisions.
 # ---------------------------------------------------------------------------
 def paged_attend_gqa_ref(q, k_pool, v_pool, tables, k_len, *, scale,
-                         softmax_impl: str = "exact", kv_dtype=None):
+                         softmax_impl: str = "exact", kv_dtype=None,
+                         kv_quant: str = "none",
+                         k_scale_pool=None, v_scale_pool=None):
     """Gather-path oracle for kernels.paged_attention.gqa_decode.
 
     q (B,KH,G,hd); pools (N,L,KH,hd); tables (B,M); k_len (B,).
@@ -63,12 +65,31 @@ def paged_attend_gqa_ref(q, k_pool, v_pool, tables, k_len, *, scale,
     models.attention._gqa_paged_apply's gather decode runs them (the
     decode query sits at position k_len - 1, making the causal mask
     equivalent to the plain length mask).
+
+    With ``kv_quant`` set the gather dequantizes through the SAME
+    production helper the engine's gather attend uses
+    (attention._pool_gather_dequant -> kv_quant.dequantize, the CORDIC
+    linear-rotation multiply) — the oracle stays bit-exact against the
+    serving path by construction, and the Pallas kernel must reproduce
+    its token decisions.
     """
+    from repro.core import kv_quant as kvq
+    from repro.kernels.paged_attention import canonical_kv_dtype
     from repro.models import attention as A  # lazy: avoid import cycle
 
-    kv_dtype = kv_dtype if kv_dtype is not None else k_pool.dtype
-    kf = A._pool_gather(k_pool, tables).astype(kv_dtype)
-    vf = A._pool_gather(v_pool, tables).astype(kv_dtype)
+    spec = kvq.spec_for(kv_quant)
+    kv_dtype = canonical_kv_dtype(kv_dtype)
+    if kv_dtype is None:
+        kv_dtype = (jnp.dtype(jnp.float32) if spec is not None
+                    else canonical_kv_dtype(k_pool.dtype))
+    if spec is None:
+        kf = A._pool_gather(k_pool, tables).astype(kv_dtype)
+        vf = A._pool_gather(v_pool, tables).astype(kv_dtype)
+    else:
+        kf = A._pool_gather_dequant(k_pool, k_scale_pool, tables,
+                                    spec).astype(kv_dtype)
+        vf = A._pool_gather_dequant(v_pool, v_scale_pool, tables,
+                                    spec).astype(kv_dtype)
     o = A._attend_rows(q[:, None], kf, vf, (k_len - 1)[:, None], k_len,
                        scale, "f32", softmax_impl)
     return o[:, 0]

@@ -48,6 +48,14 @@ def main(argv=None):
                          "shaped transient) or the block-walking Pallas "
                          "kernel (O(block_len) transient; same tokens). "
                          "Requires --kv-impl paged")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "q2_14"],
+                    help="paged-pool storage format (core/kv_quant.py): "
+                         "K/V quantized at pool-write time against per-"
+                         "block-per-head scales and dequantized at every "
+                         "read via the CORDIC linear-rotation multiply — "
+                         "int8 cuts resident pool bytes ~4x, q2_14 ~2x. "
+                         "Requires --kv-impl paged")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: prompts longer than this stream "
                          "in as block-aligned chunks interleaved with "
@@ -99,7 +107,7 @@ def main(argv=None):
 
         cfg = dataclasses.replace(cfg, input_mode="tokens")
     print(f"[serve] arch={cfg.name} slots={args.slots} kv={args.kv_impl} "
-          f"tp={args.tp or 1}")
+          f"kv_quant={args.kv_quant} tp={args.tp or 1}")
     params = tf.init(cfg, jax.random.PRNGKey(0))
     # temperature <= 0 resolves to greedy inside SamplingParams
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k)
@@ -108,6 +116,7 @@ def main(argv=None):
                       block_len=args.block_len,
                       num_blocks=args.num_blocks or None,
                       paged_attend_impl=args.paged_attend_impl,
+                      kv_quant=args.kv_quant,
                       prefill_chunk=args.prefill_chunk or None,
                       prefill_batch=args.prefill_batch or None,
                       max_prefill_tokens=args.max_prefill_tokens or None,

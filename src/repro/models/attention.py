@@ -175,6 +175,66 @@ def _pool_write(pool, tables, lens, new):
     return pool.at[blk.reshape(-1)].set(blocks)
 
 
+def _pool_write_quant(pool, scale_pool, tables, lens, new, spec):
+    """_pool_write for a quantized pool: quantize-at-write against
+    per-block-per-head amax scales. Returns (pool, scale_pool) updated.
+
+    pool: (N, L, KH, hd) integer codes; scale_pool: (N, 1, KH, 1) f32.
+
+    S % L == 0  — prefill: each written block gets a fresh scale from its
+                  own per-head amax (bucket padding rides along in the
+                  amax — deterministic, and padded positions are masked at
+                  attend time anyway), codes and scales scattered through
+                  the same table entries.
+    S == 1      — decode append into a possibly part-filled block: the
+                  block scale is a running per-head max. A fresh block
+                  (lens % L == 0) takes the new element's scale outright
+                  (the old pool entry is a previous tenant's); otherwise
+                  the scale can only grow, and when it does the block's
+                  existing codes are re-quantized by the ratio old/new —
+                  ratio <= 1, so the rescale itself never clips. When the
+                  scale is unchanged the ratio is exactly 1.0 and integer
+                  codes survive the round-trip bit-for-bit, which keeps
+                  append-only decode deterministic across TP layouts.
+
+    Vacant slots (all-zero tables) land both writes in scratch block 0,
+    same as _pool_write — scratch contents are garbage by contract and
+    masked at every read.
+    """
+    from repro.core import kv_quant as kvq  # lazy: quant optional at import
+
+    B, S = new.shape[:2]
+    L = pool.shape[1]
+    fmt = spec.fmt
+    if S == 1:
+        blk = jnp.take_along_axis(tables, (lens // L)[:, None], axis=1,
+                                  mode="clip")[:, 0]
+        elem = new[:, 0].astype(jnp.float32)                     # (B, KH, hd)
+        need = kvq.scale_for_amax(
+            jnp.max(jnp.abs(elem), axis=-1)[:, None, :, None], spec)
+        old = scale_pool[blk]                                    # (B,1,KH,1)
+        fresh = (lens % L == 0)[:, None, None, None]
+        new_scale = jnp.where(fresh, need, jnp.maximum(old, need))
+        # re-quantize the block's existing codes to the (possibly grown)
+        # scale; ratio <= 1 for live blocks so the clip below is only a
+        # guard against stale garbage under a fresh block's ratio > 1
+        ratio = old / new_scale
+        cur = pool[blk].astype(jnp.float32)                      # (B,L,KH,hd)
+        resc = jnp.clip(jnp.round(cur * ratio), fmt.min_int,
+                        fmt.max_int).astype(pool.dtype)
+        code = kvq.quantize(elem, spec, new_scale[:, 0])         # (B, KH, hd)
+        pool = pool.at[blk].set(resc).at[blk, lens % L].set(code)
+        return pool, scale_pool.at[blk].set(new_scale)
+    assert S % L == 0, f"prefill width {S} not a multiple of block_len {L}"
+    nb = S // L
+    idx = (lens // L)[:, None] + jnp.arange(nb)[None, :]         # (B, nb)
+    blk = jnp.take_along_axis(tables, idx, axis=1, mode="clip").reshape(-1)
+    blocks = new.reshape((B * nb, L) + new.shape[2:]).astype(jnp.float32)
+    scales = kvq.block_scale(blocks, spec)                       # (B*nb,1,KH,1)
+    codes = kvq.quantize(blocks, spec, scales)
+    return pool.at[blk].set(codes), scale_pool.at[blk].set(scales)
+
+
 def _pool_gather(pool, tables):
     """Assemble each row's logical KV buffer from its block table:
     (N, L, *f) pool + (B, M) tables -> (B, M*L, *f). Entries past the
@@ -191,6 +251,24 @@ def _pool_gather(pool, tables):
     B, M = tables.shape
     L = pool.shape[1]
     return pool[tables].reshape((B, M * L) + pool.shape[2:])
+
+
+def _pool_gather_dequant(pool, scale_pool, tables, spec):
+    """_pool_gather for a quantized pool: gather codes and per-block
+    scales through the same table, then CORDIC-dequantize elementwise.
+
+    Returns (B, M*L, KH, hd) f32. This is the single dequant definition
+    both the engine's gather attend and kernels/ref.py's oracle call, so
+    the reference cannot drift from production: (code, scale) pairs are
+    identical to what the Pallas kernel sees per block, and
+    kv_quant.dequantize is elementwise-deterministic."""
+    from repro.core import kv_quant as kvq  # lazy: quant optional at import
+
+    L = pool.shape[1]
+    codes = _pool_gather(pool, tables)                   # (B, M*L, KH, hd)
+    scales = jnp.repeat(_pool_gather(scale_pool, tables),  # (B, M, KH, 1)
+                        L, axis=1)                       # (B, M*L, KH, 1)
+    return kvq.dequantize(codes, spec, scales)
 
 
 def _attend_rows(q, k, v, q_pos, k_len, scale, score_dtype: str = "f32",
@@ -277,15 +355,30 @@ def gqa_init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
     """Paged decode cache for one GQA layer: a global (num_blocks,
     block_len, KH, hd) K/V pool shared by every slot, per-slot block
     tables (slots, max_blocks) into it, and per-slot lengths. Block 0 is
-    the scratch block (kv_pager.SCRATCH_BLOCK): vacant slots point at it."""
+    the scratch block (kv_pager.SCRATCH_BLOCK): vacant slots point at it.
+
+    With ``cfg.kv_quant`` != "none" the K/V pools store integer codes in
+    the format's lane dtype and two extra leaves carry the per-block
+    per-head f32 scales, shape (num_blocks, 1, KH, 1) — the "_pool"
+    suffix routes them through the same view/merge plumbing as the code
+    pools, and dim -2 is KH so the TP kv-heads sharding rule covers them.
+    Scales start at 1.0 (scratch/unwritten blocks dequantize to zero)."""
+    from repro.core import kv_quant as kvq  # lazy: quant optional at import
+
     _, KH = _padded_heads(cfg)
     hd = cfg.head_dim
-    return {
-        "k_pool": jnp.zeros((num_blocks, block_len, KH, hd), dtype),
-        "v_pool": jnp.zeros((num_blocks, block_len, KH, hd), dtype),
+    spec = kvq.spec_for(getattr(cfg, "kv_quant", "none"))
+    kv_dtype = dtype if spec is None else spec.code_dtype
+    cache = {
+        "k_pool": jnp.zeros((num_blocks, block_len, KH, hd), kv_dtype),
+        "v_pool": jnp.zeros((num_blocks, block_len, KH, hd), kv_dtype),
         "tables": jnp.zeros((slots, max_blocks), jnp.int32),
         "lens": jnp.zeros((slots,), jnp.int32),
     }
+    if spec is not None:
+        cache["k_scale_pool"] = jnp.ones((num_blocks, 1, KH, 1), jnp.float32)
+        cache["v_scale_pool"] = jnp.ones((num_blocks, 1, KH, 1), jnp.float32)
+    return cache
 
 
 def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
@@ -310,8 +403,17 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
     q = cm.apply_rope(q, positions, cfg.rope_theta)
     k = cm.apply_rope(k, positions, cfg.rope_theta)
 
-    kp = _pool_write(cache["k_pool"], tables, lens, k)
-    vp = _pool_write(cache["v_pool"], tables, lens, v)
+    from repro.core import kv_quant as kvq  # lazy: quant optional at import
+    spec = kvq.spec_for(getattr(cfg, "kv_quant", "none"))
+    if spec is None:
+        kp = _pool_write(cache["k_pool"], tables, lens, k)
+        vp = _pool_write(cache["v_pool"], tables, lens, v)
+        ks = vs = None
+    else:
+        kp, ks = _pool_write_quant(cache["k_pool"], cache["k_scale_pool"],
+                                   tables, lens, k, spec)
+        vp, vs = _pool_write_quant(cache["v_pool"], cache["v_scale_pool"],
+                                   tables, lens, v, spec)
     qg = q.reshape(B, S, KH, G, hd)
 
     if S == 1 and _paged_attend_impl(cfg) == "pallas":
@@ -322,7 +424,8 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
         attend = functools.partial(
             kops.paged_attend_gqa, scale=1.0 / np.sqrt(hd),
             softmax_impl=getattr(cfg, "softmax_impl", "exact"),
-            kv_dtype=x.dtype)
+            kv_dtype=x.dtype,
+            kv_quant=getattr(cfg, "kv_quant", "none"))
         mesh = shd.active_serving_mesh()
         if mesh is not None:
             # pallas_call is opaque to GSPMD — run the kernel shard-local
@@ -330,12 +433,19 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
             # tables/lens replicated, no collective inside attention.
             # ServeEngine init guarantees KH % tp == 0 on this path.
             o = PA.shard_local_gqa(attend, mesh, qg[:, 0], kp, vp,
-                                   tables, lens + 1)[:, None]
+                                   tables, lens + 1,
+                                   k_scale_pool=ks,
+                                   v_scale_pool=vs)[:, None]
         else:
-            o = attend(qg[:, 0], kp, vp, tables, lens + 1)[:, None]
+            o = attend(qg[:, 0], kp, vp, tables, lens + 1,
+                       k_scale_pool=ks, v_scale_pool=vs)[:, None]
     else:
-        k_full = _pool_gather(kp, tables).astype(x.dtype)
-        v_full = _pool_gather(vp, tables).astype(x.dtype)
+        if spec is None:
+            k_full = _pool_gather(kp, tables).astype(x.dtype)
+            v_full = _pool_gather(vp, tables).astype(x.dtype)
+        else:
+            k_full = _pool_gather_dequant(kp, ks, tables, spec).astype(x.dtype)
+            v_full = _pool_gather_dequant(vp, vs, tables, spec).astype(x.dtype)
         o = _attend_rows(qg, k_full, v_full, positions, lens + S,
                          1.0 / np.sqrt(hd), cfg.score_dtype,
                          getattr(cfg, "softmax_impl", "exact"))
@@ -343,6 +453,9 @@ def _gqa_paged_apply(params, x, cfg, cache, q, k, v):
     y = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
     new_cache = {"k_pool": kp, "v_pool": vp, "tables": tables,
                  "lens": lens + S}
+    if spec is not None:
+        new_cache["k_scale_pool"] = ks
+        new_cache["v_scale_pool"] = vs
     return y, new_cache
 
 
@@ -455,6 +568,12 @@ def mla_init_paged_cache(cfg, slots: int, num_blocks: int, block_len: int,
     """Paged decode cache for one MLA layer: global block pools over the
     *compressed* latent (c_kv) and the shared rope key, plus per-slot
     block tables/lengths (layout mirrors gqa_init_paged_cache)."""
+    if getattr(cfg, "kv_quant", "none") not in (None, "none"):
+        # quantizing the compressed latent is a different design (error
+        # amplifies through the absorbed up-projection); the engine
+        # rejects this combination at init, this guard covers direct users
+        raise ValueError("kv_quant applies to GQA paged pools only; MLA "
+                         "layers store the compressed latent unquantized")
     m = cfg.mla
     return {
         "c_kv_pool": jnp.zeros((num_blocks, block_len, m.kv_lora_rank), dtype),

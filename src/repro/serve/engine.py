@@ -410,6 +410,7 @@ class ServeEngine:
                  block_len: Optional[int] = None,
                  num_blocks: Optional[int] = None,
                  paged_attend_impl: Optional[str] = None,
+                 kv_quant: Optional[str] = None,
                  prefill_chunk: Optional[int] = None,
                  prefill_batch: Optional[int] = None,
                  max_prefill_tokens: Optional[int] = None,
@@ -430,6 +431,8 @@ class ServeEngine:
             cfg = dataclasses.replace(cfg, kv_block_len=block_len)
         if paged_attend_impl is not None:
             cfg = dataclasses.replace(cfg, paged_attend_impl=paged_attend_impl)
+        if kv_quant is not None:
+            cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -454,6 +457,29 @@ class ServeEngine:
             raise ValueError(
                 "paged_attend_impl='pallas' supports score_dtype='f32' "
                 f"only (got {cfg.score_dtype!r})")
+        # -- quantized paged-KV plane (core/kv_quant.py) --------------------
+        from repro.core import kv_quant as kvq_mod
+
+        self.kv_quant = getattr(cfg, "kv_quant", "none")
+        self._kv_quant_spec = kvq_mod.spec_for(self.kv_quant)  # raises on typo
+        if self._kv_quant_spec is not None:
+            if self.kv_impl != "paged":
+                raise ValueError(
+                    "kv_quant quantizes the paged block pools; serve it "
+                    "with kv_impl='paged' (the dense plane stays full-"
+                    f"width), got kv_impl={self.kv_impl!r}")
+            if getattr(cfg, "mla", None) is not None or any(
+                    k.startswith("mla") for k in cfg.block_pattern):
+                raise ValueError(
+                    "kv_quant applies to GQA paged pools only; MLA layers "
+                    "store the compressed latent unquantized")
+        if self.paged_attend_impl == "pallas":
+            # the kv_dtype seam the kernel replays is cfg.dtype — reject
+            # unknown/integer dtypes at init instead of letting them fall
+            # through to the pool dtype mid-serving (kernels validate too)
+            from repro.kernels.paged_attention import canonical_kv_dtype
+
+            canonical_kv_dtype(cfg.dtype)
         # -- tensor-parallel mesh (tentpole refactor; see docstring table) --
         # tp=N resolves to a ("data","model") host mesh with an N-wide
         # model axis; mesh=None/tp=1 is the legacy single-device path
@@ -552,6 +578,10 @@ class ServeEngine:
             self._caches = tf.init_paged_cache(
                 cfg, slots, num_blocks, self.block_len, self.max_blocks,
                 jnp.float32)
+            # device bytes per block across layers (codes + quant scales):
+            # feeds the pager's kv.pool.bytes_in_use gauge and the
+            # kv.quant.bytes_per_token series the bench gates on
+            self.pager.block_bytes = self.kv_pool_bytes() // num_blocks
 
             def _clear_fn(caches, slot):
                 return tf.paged_set_slot(
@@ -715,6 +745,17 @@ class ServeEngine:
         self._m_mesh_dev = m.gauge("engine.mesh.devices", unit="devices")
         self._m_mesh_tp.set(self.tp)
         self._m_mesh_dev.set(self.mesh.size if self.mesh is not None else 1)
+        # quantized-KV series: format choice and pool geometry are fixed at
+        # init, so (like the mesh gauges) these are set once per bind —
+        # code_bits is the pool lane width (32 means unquantized), and
+        # bytes_per_token is resident pool bytes per position of capacity
+        # (codes + scales), the number the kv_quant bench section gates
+        self._m_kvq_bits = m.gauge("kv.quant.code_bits", unit="bits")
+        self._m_kvq_bpt = m.gauge("kv.quant.bytes_per_token", unit="bytes")
+        spec = self._kv_quant_spec
+        self._m_kvq_bits.set(spec.code_bits if spec is not None else 32)
+        if self.pager is not None and self.pager.block_bytes:
+            self._m_kvq_bpt.set(self.pager.block_bytes / self.block_len)
         self._m_ttft = m.histogram("engine.ttft_ms", unit="ms")
         self._m_tpot = m.histogram("engine.tpot_ms", unit="ms")
         self._m_e2e = m.histogram("engine.e2e_ms", unit="ms")
@@ -737,6 +778,25 @@ class ServeEngine:
         the current jit-cache sizes."""
         self.obs = obs if obs is not None else obs_lib.NULL
         self._bind_obs_handles()
+
+    def kv_pool_bytes(self) -> int:
+        """Resident device bytes of the paged pool leaves across layers —
+        K/V code pools plus, under kv_quant, the per-block scale pools
+        (every ``*_pool`` leaf). This is the footprint quantization
+        shrinks; the kv_quant bench section compares it across formats at
+        matched block count. 0 on the dense plane."""
+        if self.kv_impl != "paged":
+            return 0
+        total = 0
+
+        def one(path, leaf):
+            nonlocal total
+            name = getattr(path[-1], "key", None)
+            if isinstance(name, str) and name.endswith("_pool"):
+                total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+
+        jax.tree_util.tree_map_with_path(one, self._caches)
+        return total
 
     def _obs_compiles(self) -> None:
         """Fold compile_counts() deltas into compile counters + trace

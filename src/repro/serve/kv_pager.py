@@ -120,7 +120,7 @@ class KVPager:
     """
 
     def __init__(self, num_blocks: int, block_len: int, slots: int,
-                 metrics=None):
+                 metrics=None, block_bytes: int = 0):
         if num_blocks < 2:
             raise ValueError("pool needs >= 2 blocks (one is scratch)")
         if block_len < 1:
@@ -128,6 +128,10 @@ class KVPager:
         self.num_blocks = num_blocks
         self.block_len = block_len
         self.slots = slots
+        # device bytes per pool block across all layers (K+V codes plus,
+        # under kv_quant, the per-block scale tensors) — the engine sets
+        # it once the device pools exist; 0 keeps the bytes gauge silent
+        self.block_bytes = block_bytes
         # LIFO free list: recently freed blocks are reused first, which
         # keeps the working set compact and exercises stale-block masking
         self._free: List[int] = list(range(num_blocks - 1, SCRATCH_BLOCK, -1))
@@ -147,6 +151,7 @@ class KVPager:
             metrics = NULL_REGISTRY
         self._m_in_use = metrics.gauge("kv.pool.blocks_in_use",
                                        unit="blocks")
+        self._m_bytes = metrics.gauge("kv.pool.bytes_in_use", unit="bytes")
         self._m_allocs = metrics.counter("kv.pool.allocs", unit="allocs")
         self._m_failures = metrics.counter("kv.pool.alloc_failures",
                                            unit="events")
@@ -233,6 +238,7 @@ class KVPager:
         if freed:
             self._m_freed.inc(freed)
         self._m_in_use.set(self.blocks_in_use)
+        self._m_bytes.set(self.blocks_in_use * self.block_bytes)
         return freed
 
     # -- alloc / free -------------------------------------------------------
@@ -272,6 +278,7 @@ class KVPager:
         self._peak = max(self._peak, self.blocks_in_use)
         self._m_allocs.inc()
         self._m_in_use.set(self.blocks_in_use)
+        self._m_bytes.set(self.blocks_in_use * self.block_bytes)
         return list(blocks)
 
     def free(self, slot: int) -> int:

@@ -31,7 +31,8 @@ METRIC_SOURCE_FILES = [
 ]
 
 #: a documented metric name starts with one of these
-METRIC_PREFIXES = ("engine.", "kv.pool.", "prefix.", "fixed_point.")
+METRIC_PREFIXES = ("engine.", "kv.pool.", "kv.quant.", "prefix.",
+                   "fixed_point.")
 
 _FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -145,6 +146,7 @@ def test_known_series_present():
     for name in ("engine.ttft_ms", "engine.prefill.tokens",
                  "prefix.hit_tokens", "prefix.blocks_shared",
                  "kv.pool.blocks_saved", "kv.pool.blocks_in_use",
-                 "engine.phase.*_ms",
+                 "kv.pool.bytes_in_use", "kv.quant.code_bits",
+                 "kv.quant.bytes_per_token", "engine.phase.*_ms",
                  "fixed_point.saturation.clips{fmt=*}"):
         assert name in doc, f"{name} missing from docs/observability.md"

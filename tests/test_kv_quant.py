@@ -1,0 +1,332 @@
+"""Quantized paged-KV conformance (cfg.kv_quant, core/kv_quant.py): the
+block-scaled int8 / q2_14 pool formats across every layer that touches
+them — the quantize-at-write helpers, the gather dequant, the Pallas
+kernel's in-VMEM CORDIC dequant against the gather oracle, the serving
+engine's token streams, the pool-bytes accounting the bench section
+gates, and the fail-fast validation surface.
+
+The dequantize is the CORDIC linear-rotation multiply applied
+elementwise (codes * scale), so the kernel and gather paths must agree
+bit-for-bit on the dequantized operands; only the attend's f32
+reduction order differs, bounded by the same ATOL as the unquantized
+kernel suite.
+
+CI runs this file once per datapath backend via REPRO_TEST_BACKEND in
+{"jnp", "pallas_interpret"} (rides the paged-attention kernel
+conformance step), so a dequant drift in one backend's decode path is
+attributed to the backend that drifted.  Unset (tier-1), the exact
+softmax runs.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import kv_quant as kvq
+from repro.kernels import paged_attention as PA
+from repro.kernels import ref as kref
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
+
+_SOFTMAX_BY_BACKEND = {None: "exact", "jnp": "cordic_fixed",
+                       "pallas_interpret": "cordic_pallas"}
+_BACKEND = os.environ.get("REPRO_TEST_BACKEND")
+assert _BACKEND in _SOFTMAX_BY_BACKEND, \
+    f"REPRO_TEST_BACKEND={_BACKEND!r} not in {sorted(filter(None, _SOFTMAX_BY_BACKEND))}"
+SOFTMAX_IMPL = _SOFTMAX_BY_BACKEND[_BACKEND]
+
+#: same f32 contraction-order tolerance as test_paged_attention.py: the
+#: dequantized operands are bit-identical between kernel and oracle,
+#: only the online-softmax reduction order differs.
+ATOL = 2e-5
+
+FORMATS = ("int8", "q2_14")
+
+
+def _cfg(arch: str = "yi-9b"):
+    return dataclasses.replace(configs.get_smoke(arch, act_impl="exact"),
+                               softmax_impl=SOFTMAX_IMPL)
+
+
+# ---------------------------------------------------------------------------
+# core/kv_quant.py: quantize/dequantize roundtrip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_roundtrip_error_within_half_step(fmt):
+    """The exact product codes * scale lands within half a quantization
+    step (scale * format resolution / 2) of x for every element — the
+    per-block amax scale maps the block exactly onto the code range —
+    and the production dequantize (the CORDIC linear-rotation multiply)
+    tracks that exact product to the multiply's own Q-format precision."""
+    from repro.core import fixed_point as fp
+
+    spec = kvq.spec_for(fmt)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(6, 16, 2, 8)).astype(np.float32))
+    scale = kvq.block_scale(x, spec)
+    assert scale.shape == (6, 1, 2, 1)
+    codes = kvq.quantize(x, spec, scale)
+    assert codes.dtype == spec.code_dtype
+    exact = fp.dequantize(codes, spec.fmt) * jnp.broadcast_to(scale, x.shape)
+    err = float(jnp.max(jnp.abs(exact - x)))
+    bound = float(jnp.max(scale)) * spec.fmt.resolution * 0.5 * (1 + 1e-5)
+    assert err <= bound, (err, bound)
+    # the CORDIC multiply approximates the exact product with relative
+    # error at the linear-rotation datapath's Q2.14 resolution
+    deq = kvq.dequantize(codes, spec, scale)
+    rel = float(jnp.max(jnp.abs(deq - exact))) / max(1e-9,
+                                                     float(jnp.max(jnp.abs(x))))
+    assert rel <= 2.0 ** -13, rel
+
+
+def test_spec_for_rejects_unknown_format():
+    with pytest.raises(ValueError, match="int8"):
+        kvq.spec_for("int4")
+    assert kvq.spec_for("none") is None
+    assert kvq.spec_for(None) is None
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs gather oracle under quantized pools
+# ---------------------------------------------------------------------------
+def _quant_case(klen_list, fmt, *, L=4, KH=2, G=2, hd=8, seed=0):
+    """Quantized pools/tables/lens for a batch of live lengths: float
+    pools are block-scaled and coded exactly as the prefill write path
+    does it, so kernel and oracle see production-shaped operands."""
+    spec = kvq.spec_for(fmt)
+    rng = np.random.default_rng(seed)
+    B = len(klen_list)
+    M = max(-(-k // L) for k in klen_list if k) if any(klen_list) else 1
+    N = 1 + B * M
+    q = jnp.asarray(rng.normal(size=(B, KH, G, hd)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(N, L, KH, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(N, L, KH, hd)), jnp.float32)
+    ks = kvq.block_scale(kf, spec)
+    vs = kvq.block_scale(vf, spec)
+    kp = kvq.quantize(kf, spec, ks)
+    vp = kvq.quantize(vf, spec, vs)
+    tables = np.zeros((B, M), np.int32)
+    nxt = 1
+    for b, klen in enumerate(klen_list):
+        for c in range(-(-klen // L)):
+            tables[b, c] = nxt
+            nxt += 1
+    k_len = jnp.asarray([max(k, 1) for k in klen_list], jnp.int32)
+    return q, kp, vp, ks, vs, jnp.asarray(tables), k_len
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+@pytest.mark.parametrize("klens", [[1], [4], [5], [16],
+                                   [1, 4, 5, 13, 16, 3]])
+def test_gqa_kernel_quant_matches_ref(fmt, klens):
+    """The kernel's per-chunk in-VMEM dequant against the gather oracle
+    (kernels/ref.py dequantizes via the same production helper): f32
+    round-off agreement and per-row argmax identity, over the same edge
+    geometry the unquantized suite walks (on/off block boundaries,
+    single block, mixed batch)."""
+    q, kp, vp, ks, vs, tables, k_len = _quant_case(klens, fmt,
+                                                   seed=len(klens))
+    got = np.asarray(PA.gqa_decode(q, kp, vp, tables, k_len, scale=0.3,
+                                   softmax_impl=SOFTMAX_IMPL, kv_quant=fmt,
+                                   k_scale_pool=ks, v_scale_pool=vs,
+                                   interpret=True))
+    want = np.asarray(kref.paged_attend_gqa_ref(q, kp, vp, tables, k_len,
+                                                scale=0.3,
+                                                softmax_impl=SOFTMAX_IMPL,
+                                                kv_quant=fmt,
+                                                k_scale_pool=ks,
+                                                v_scale_pool=vs))
+    assert np.abs(got - want).max() < ATOL, np.abs(got - want).max()
+    np.testing.assert_array_equal(got.reshape(got.shape[0], -1).argmax(-1),
+                                  want.reshape(want.shape[0], -1).argmax(-1))
+    assert np.isfinite(got).all()
+
+
+def test_gqa_kernel_quant_vacant_slot():
+    """A vacant row (all-zero table -> scratch block 0) rides along under
+    quantization like an inactive engine slot: finite output, live rows
+    unaffected."""
+    q, kp, vp, ks, vs, tables, k_len = _quant_case([5, 0, 9], "int8",
+                                                   seed=4)
+    assert int(tables[1].max()) == 0
+    out = np.asarray(PA.gqa_decode(q, kp, vp, tables, k_len, scale=0.3,
+                                   softmax_impl=SOFTMAX_IMPL, kv_quant="int8",
+                                   k_scale_pool=ks, v_scale_pool=vs,
+                                   interpret=True))
+    assert np.isfinite(out).all()
+
+
+def test_gqa_decode_quant_requires_scale_pools():
+    """kv_quant and the scale pools come together — the kernel must fail
+    fast on a half-wired call instead of attending garbage."""
+    q, kp, vp, ks, vs, tables, k_len = _quant_case([5], "int8")
+    with pytest.raises(ValueError, match="scale"):
+        PA.gqa_decode(q, kp, vp, tables, k_len, scale=0.3,
+                      softmax_impl=SOFTMAX_IMPL, kv_quant="int8",
+                      interpret=True)
+    with pytest.raises(ValueError, match="scale"):
+        PA.gqa_decode(q, kp, vp, tables, k_len, scale=0.3,
+                      softmax_impl=SOFTMAX_IMPL,
+                      k_scale_pool=ks, v_scale_pool=vs, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# kv_dtype validation (the seam kv_quant turned into a real stage)
+# ---------------------------------------------------------------------------
+def test_canonical_kv_dtype_validates():
+    assert PA.canonical_kv_dtype(None) is None
+    assert PA.canonical_kv_dtype(jnp.bfloat16) == jnp.dtype(jnp.bfloat16)
+    assert PA.canonical_kv_dtype("float32") == jnp.dtype(jnp.float32)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        PA.canonical_kv_dtype("bogus")
+    with pytest.raises(ValueError, match="kv_quant"):
+        PA.canonical_kv_dtype(jnp.int8)  # integer storage is kv_quant's job
+
+
+# ---------------------------------------------------------------------------
+# Serving-level token identity + pool accounting (the acceptance bar)
+# ---------------------------------------------------------------------------
+def _mk_reqs(cfg, n, *, max_new=5, seed=7, sampling=None):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 3 + 2 * i),
+                    max_new_tokens=max_new, sampling=sampling)
+            for i in range(n)]
+
+
+def _serve(cfg, params, reqs, **kw):
+    eng = ServeEngine(cfg, params, slots=4, max_len=64, seed=0, **kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return [r.out for r in reqs], eng
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_engine_quant_gather_pallas_tokens_identical(fmt):
+    """Per format, the pallas attend (in-kernel dequant) must emit token
+    streams bit-identical to the gather attend (pool-side dequant): both
+    feed the attend the same dequantized values, so the storage format
+    cannot open a kernel-vs-gather gap."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    gather, _ = _serve(cfg, params, _mk_reqs(cfg, 6), kv_impl="paged",
+                       kv_quant=fmt, paged_attend_impl="gather")
+    pallas, _ = _serve(cfg, params, _mk_reqs(cfg, 6), kv_impl="paged",
+                       kv_quant=fmt, paged_attend_impl="pallas")
+    assert pallas == gather
+
+
+def test_engine_kv_quant_none_identical_to_default():
+    """kv_quant='none' is the identity configuration: bit-identical
+    tokens to an engine that never heard of the knob."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    default, _ = _serve(cfg, params, _mk_reqs(cfg, 4), kv_impl="paged")
+    none, _ = _serve(cfg, params, _mk_reqs(cfg, 4), kv_impl="paged",
+                     kv_quant="none")
+    assert none == default
+
+
+def test_engine_quant_with_prefix_cache_identical():
+    """Prefix-cache sharing keys on token ids, not pool contents, so
+    cache-on must stay bit-identical to cache-off under quantization —
+    shared blocks carry codes + scales like any other block."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)  # 2 blocks
+    tails = [rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+             for _ in range(3)]
+
+    def serve(prefix: bool):
+        eng = ServeEngine(cfg, params, slots=4, max_len=64, seed=0,
+                          kv_impl="paged", kv_quant="int8",
+                          prefix_cache=prefix)
+        prime = Request(rid=0, prompt=shared.copy(), max_new_tokens=4)
+        eng.submit(prime)
+        eng.run()   # prefix blocks cached before the sharing wave admits
+        rest = [Request(rid=1 + i, prompt=np.concatenate([shared, t]),
+                        max_new_tokens=4) for i, t in enumerate(tails)]
+        for r in rest:
+            eng.submit(r)
+        eng.run()
+        return [r.out for r in [prime] + rest], eng
+
+    off, _ = serve(False)
+    on, eng = serve(True)
+    assert on == off
+    assert eng.prefix.hits > 0   # the cache actually engaged
+
+
+@pytest.mark.parametrize("fmt,min_ratio", [("int8", 2.0), ("q2_14", 1.9)])
+def test_pool_bytes_collapse(fmt, min_ratio):
+    """Resident pool bytes (codes + scale pools) at MATCHED block count
+    must collapse by the format's floor vs the unquantized f32 pool —
+    the memory claim the bench section gates, checked here per backend."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(3))
+    _, base = _serve(cfg, params, _mk_reqs(cfg, 2, max_new=2),
+                     kv_impl="paged")
+    _, quant = _serve(cfg, params, _mk_reqs(cfg, 2, max_new=2),
+                      kv_impl="paged", kv_quant=fmt)
+    assert quant.pager.stats().num_blocks == base.pager.stats().num_blocks
+    ratio = base.kv_pool_bytes() / quant.kv_pool_bytes()
+    assert ratio >= min_ratio, ratio
+    # bytes/token follows the pool: block_bytes is derated the same way
+    assert quant.pager.block_bytes < base.pager.block_bytes
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast validation surface
+# ---------------------------------------------------------------------------
+def test_engine_rejects_unknown_format():
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="int8"):
+        ServeEngine(cfg, params, slots=1, max_len=32, kv_impl="paged",
+                    kv_quant="int4")
+
+
+def test_engine_rejects_dense_plane():
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, slots=1, max_len=32, kv_impl="dense",
+                    kv_quant="int8")
+
+
+def test_engine_rejects_mla():
+    """MLA layers page the compressed latent, which has no kv-heads axis
+    to scale over — the engine must refuse at construction."""
+    cfg = _cfg("deepseek-v2-lite-16b")
+    params = tf.init(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="MLA"):
+        ServeEngine(cfg, params, slots=1, max_len=32, kv_impl="paged",
+                    kv_quant="int8")
+
+
+# ---------------------------------------------------------------------------
+# Transient accounting stays quant-aware
+# ---------------------------------------------------------------------------
+def test_transient_quant_pallas_invariant_and_below_gather():
+    """The kernel's O(block_len) transient contract survives
+    quantization: code-width streaming plus the per-chunk f32 dequant
+    buffers stay max_len-invariant, while the quantized gather still
+    materializes (and dequantizes) the full table."""
+    cfg = _cfg()
+    tr = lambda impl, ml: PA.decode_transient_bytes(            # noqa: E731
+        cfg, max_len=ml, block_len=16, impl=impl, kv_quant="int8")
+    assert tr("pallas", 64) == tr("pallas", 1 << 20)
+    assert tr("gather", 128) > tr("gather", 64)
+    assert tr("pallas", 1 << 20) < tr("gather", 1 << 20)
+    # MLA has no quantized plane: the accounting refuses rather than
+    # inventing a number for a configuration the engine rejects
+    mla = _cfg("deepseek-v2-lite-16b")
+    with pytest.raises(ValueError, match="GQA"):
+        PA.decode_transient_bytes(mla, max_len=64, block_len=16,
+                                  impl="gather", kv_quant="int8")

@@ -215,6 +215,58 @@ def test_saturation_observer_never_traces():
     np.testing.assert_allclose(np.asarray(out), fp.Q2_14.max_int / 2**14)
 
 
+@pytest.mark.parametrize("fmt,label", [("int8", "Q8.0"), ("q2_14", "Q2.14")])
+def test_kv_quant_saturation_counters(fmt, label):
+    """The quantized paged-KV write path rides the same eager-quantize
+    observer: per-block amax scales map every element inside the code
+    range (clips stay ZERO on in-range traces), while a deliberately
+    pinned too-small scale pushes the tail out of range and the clip
+    counter for the format's Q label moves."""
+    from repro.core import kv_quant as kvq
+
+    spec = kvq.spec_for(fmt)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 16, 2, 8)).astype(np.float32))
+    good = kvq.block_scale(x, spec)
+    reg = MetricsRegistry()
+    with obs_lib.observe_saturation(reg):
+        kvq.quantize(x, spec, good)
+    clips = reg.get(f"fixed_point.saturation.clips{{fmt={label}}}")
+    total = reg.get(f"fixed_point.saturation.elements{{fmt={label}}}")
+    assert clips is not None and clips.value == 0
+    assert total.value == x.size
+    with obs_lib.observe_saturation(reg):
+        # an eighth of the proper scale leaves everything past amax/8
+        # outside the representable range — the counter must see it
+        kvq.quantize(x, spec, good / 8.0)
+    assert clips.value > 0
+    assert total.value == 2 * x.size
+
+
+def test_engine_kv_quant_gauges():
+    """A quantized engine registers the kv.quant.* gauges (code width,
+    derated bytes/token) and the pager's kv.pool.bytes_in_use follows
+    alloc/release at the quantized block size."""
+    cfg = _cfg()
+    params = tf.init(cfg, jax.random.PRNGKey(6))
+    ob = obs_lib.Observability()
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged",
+                      kv_quant="int8", obs=ob)
+    _serve(eng, _requests(cfg, 3, max_new=3))
+    m = ob.metrics
+    assert m.get("kv.quant.code_bits").last == 8.0
+    bpt = m.get("kv.quant.bytes_per_token").last
+    assert bpt == eng.pager.block_bytes / eng.block_len > 0
+    assert m.get("kv.pool.bytes_in_use").peak > 0
+    assert m.get("kv.pool.bytes_in_use").last == 0.0    # all freed
+    # the unquantized engine reports the f32 width through the same gauge
+    ob32 = obs_lib.Observability()
+    eng32 = ServeEngine(cfg, params, slots=2, max_len=64, kv_impl="paged",
+                        obs=ob32)
+    assert ob32.metrics.get("kv.quant.code_bits").last == 32.0
+    assert ob32.metrics.get("kv.quant.bytes_per_token").last > bpt
+
+
 def test_saturation_audit_per_profile():
     audit = obs_lib.saturation_audit(
         {"inrange": np.linspace(-1.5, 1.5, 64),
